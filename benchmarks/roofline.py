@@ -1,0 +1,80 @@
+"""Roofline table from results/dryrun/*.json (run launch/dryrun.py first).
+
+Also exports the markdown tables embedded in EXPERIMENTS.md §Dry-run and
+§Roofline via ``markdown_tables()``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str = "16x16", tag: str | None = None) -> list[dict]:
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh:
+            continue
+        parts = p.stem.split("__")
+        has_tag = len(parts) > 3 or (len(parts) == 4)
+        r["_tag"] = parts[3] if len(parts) > 3 else ""
+        if (tag or "") != r["_tag"]:
+            continue
+        rows.append(r)
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(mesh):
+            roof = r["roofline"]
+            name = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+            out.append((
+                name,
+                roof["step_time_lower_bound_s"] * 1e6,
+                f"dom={roof['dominant']};compute_ms={roof['compute_s']*1e3:.2f};"
+                f"mem_ms={roof['memory_s']*1e3:.2f};coll_ms={roof['collective_s']*1e3:.2f};"
+                f"useful={r['useful_flops_fraction']:.2f}",
+            ))
+    return out
+
+
+def markdown_tables(mesh: str = "16x16", tag: str | None = None) -> str:
+    rows = load(mesh, tag)
+    lines = [
+        "| arch | shape | kind | compute (ms) | memory (ms) | collective (ms) "
+        "| dominant | bound (ms) | MODEL/HLO flops | compile (s) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        roof = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {roof['compute_s']*1e3:.2f} | {roof['memory_s']*1e3:.2f} "
+            f"| {roof['collective_s']*1e3:.2f} | **{roof['dominant']}** "
+            f"| {roof['step_time_lower_bound_s']*1e3:.2f} "
+            f"| {r['useful_flops_fraction']:.2f} | {r['compile_s']:.0f} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh: str = "16x16") -> str:
+    rows = load(mesh)
+    lines = [
+        "| arch | shape | params | per-chip HLO flops | HBM model bytes/chip "
+        "| collective bytes/chip | collectives (count) | serve mode |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        coll = r["collectives"]["counts_by_kind"]
+        cstr = ",".join(f"{k.split('-')[-1] if '-' in k else k}:{v}"
+                        for k, v in sorted(coll.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['params']/1e9:.1f}B "
+            f"| {r['cost']['flops']:.2e} | {r['hbm_traffic_model']['total']:.2e} "
+            f"| {r['cost']['coll_bytes']:.2e} | {cstr} | {r.get('serve_mode','-')} |"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,70 @@
+"""Benchmark harness — one section per paper table/claim.
+
+    PYTHONPATH=src python -m benchmarks.run [--section table1|kernels|roofline|msdf]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def msdf_rows():
+    """Cycle-count claims from the MSDF simulator (paper Sec. 3.2)."""
+    import numpy as np
+
+    from repro.core.msdf import MMAUnit, kpb_inner_product
+    from repro.core import cycle_model as cm
+
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 256, 32).astype(np.uint8)
+    w = rng.integers(-128, 128, 32)
+    unit = MMAUnit(w, t_n=32)
+    t0 = time.perf_counter()
+    _, cycles = unit.run(a)
+    dt = time.perf_counter() - t0
+    rows = [("msdf/mma_unit_sim", dt * 1e6,
+             f"cycles={cycles};relation2_inner={cm.mma_tile_cycles()};"
+             f"cascaded={cm.cascaded_tile_cycles()}")]
+    a9 = rng.integers(0, 256, (9, 32)).astype(np.uint8)
+    w9 = rng.integers(-128, 128, (9, 32))
+    t0 = time.perf_counter()
+    _, kcyc = kpb_inner_product(a9, w9)
+    rows.append(("msdf/kpb_sim", (time.perf_counter() - t0) * 1e6,
+                 f"cycles={kcyc};taps=9;t_n=32"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+
+    rows: list[tuple[str, float, str]] = []
+    sections = {
+        "msdf": msdf_rows,
+    }
+    if args.section in ("all", "msdf"):
+        rows += msdf_rows()
+    if args.section in ("all", "table1"):
+        from benchmarks import table1
+
+        rows += table1.run()
+    if args.section in ("all", "kernels"):
+        from benchmarks import kernels
+
+        rows += kernels.run()
+    if args.section in ("all", "roofline"):
+        from benchmarks import roofline
+
+        rows += roofline.run()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper Table 1 reproduction.
+
+Rows:
+  * proposed(model)      — relations (2)+(3) on the calibrated U-Net,
+                           pipelined steady-state (matches time AND GOPS)
+  * proposed(as-printed) — relation (2) verbatim (matches time only)
+  * cascaded-msdf(model) — same datapath, un-merged delays (Sec. 3.2)
+  * cpu(measured)        — our own quantized U-Net inference on this host
+  * paper rows           — printed values, with derived-column consistency
+
+Output CSV: name,us_per_call,derived  (us_per_call = inference time in us).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cycle_model as cm
+
+
+def paper_rows():
+    out = []
+    for name, r in cm.PAPER_TABLE1.items():
+        power = r["gops"] / r["gops_w"]
+        out.append((f"table1/{name}(paper)", r["time_ms"] * 1e3,
+                    f"gops={r['gops']};gops_w={r['gops_w']};e_mj={r['e_mj']};power_w={power:.2f}"))
+    return out
+
+
+def model_rows():
+    layers = cm.unet_conv_layers(**cm.CALIBRATED_UNET)
+    rows = []
+    # pipelined steady state (calibration target: time + GOPS jointly)
+    tile = cm.pipelined_tile_cycles()
+    cyc = cm.model_cycles(layers, tile_cycles=tile)
+    t_ms = cyc / cm.FREQ_HZ * 1e3
+    gops = cm.model_ops(layers) / (t_ms * 1e-3) / 1e9
+    power = cm.PAPER_TABLE1["proposed"]["gops"] / cm.PAPER_TABLE1["proposed"]["gops_w"]
+    rows.append(("table1/proposed(model-pipelined)", t_ms * 1e3,
+                 f"gops={gops:.2f};gops_w={gops/power:.2f};e_mj={power*t_ms:.1f};"
+                 f"err_t={abs(t_ms-53.25)/53.25*100:.1f}%;err_gops={abs(gops-52.95)/52.95*100:.1f}%"))
+    # relation (2) exactly as printed
+    row = cm.proposed_row(layers)
+    rows.append(("table1/proposed(rel2-as-printed)", row.time_ms * 1e3,
+                 f"gops={row.gops:.2f};gops_w={row.gops_per_w:.2f};e_mj={row.energy_mj:.1f}"))
+    # cascaded baseline (the paper's own analytical comparison)
+    c = cm.cascaded_row(layers)
+    rows.append(("table1/cascaded-msdf(model)", c.time_ms * 1e3,
+                 f"gops={c.gops:.2f};merged_speedup={c.time_ms/row.time_ms:.3f}x"))
+    return rows
+
+
+def measured_cpu_row(repeats: int = 3):
+    """Quantized U-Net inference on this host CPU (per-image)."""
+    from repro.configs.unet import config as unet_cfg
+    from repro.models import unet as unet_mod
+    import dataclasses
+
+    cfg = dataclasses.replace(unet_cfg(), quant_mode="none")
+    params = unet_mod.init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((1, cfg.hw, cfg.hw, cfg.in_ch), jnp.float32)
+    fwd = jax.jit(lambda p, a: unet_mod.forward(p, a, cfg))
+    fwd(params, x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fwd(params, x).block_until_ready()
+    dt = (time.perf_counter() - t0) / repeats
+    layers = cm.unet_conv_layers(cfg.hw, cfg.in_ch, cfg.base, cfg.depth,
+                                 cfg.convs_per_stage)
+    gops = cm.model_ops(layers) / dt / 1e9
+    return [("table1/cpu(measured-here)", dt * 1e6, f"gops={gops:.2f}")]
+
+
+def run() -> list[tuple[str, float, str]]:
+    return model_rows() + measured_cpu_row() + paper_rows()

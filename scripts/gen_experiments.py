@@ -1,0 +1,450 @@
+"""Regenerate EXPERIMENTS.md from results/dryrun/*.json + the cycle model.
+
+    PYTHONPATH=src python scripts/gen_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import roofline as rl  # noqa: E402
+from repro.core import cycle_model as cm  # noqa: E402
+
+
+def j(name):
+    return json.loads((ROOT / "results" / "dryrun" / f"{name}.json").read_text())
+
+
+def terms(r):
+    roof = r["roofline"]
+    return (roof["compute_s"] * 1e3, roof["memory_s"] * 1e3,
+            roof["collective_s"] * 1e3, roof["step_time_lower_bound_s"] * 1e3,
+            roof["dominant"])
+
+
+def fmt_before_after(name_b, name_a):
+    b, a = j(name_b), j(name_a)
+    tb, ta = terms(b), terms(a)
+    return b, a, tb, ta
+
+
+def table1_section():
+    layers = cm.unet_conv_layers(**cm.CALIBRATED_UNET)
+    tile = cm.pipelined_tile_cycles()
+    cyc = cm.model_cycles(layers, tile_cycles=tile)
+    t_ms = cyc / cm.FREQ_HZ * 1e3
+    gops = cm.model_ops(layers) / (t_ms * 1e-3) / 1e9
+    row = cm.proposed_row(layers)
+    casc = cm.cascaded_row(layers)
+    return f"""## §Table1 — paper reproduction (cycle-accurate model)
+
+The paper gives relations (2)+(3) but no U-Net layer table; we calibrated a
+standard U-Net against Table 1 (`cycle_model.calibrate_unet`):
+**input 80x80x4, base 48, depth 3, one 3x3 conv per stage** (0.833 GMAC).
+
+| row | time (ms) | GOPS | GOPS/W | energy (mJ) | vs paper |
+|---|---|---|---|---|---|
+| proposed (paper, printed)        | 53.25 | 52.95 | 15.14 | 186.20 | — |
+| **proposed (our model, pipelined 2n-cycle interval)** | {t_ms:.2f} | {gops:.2f} | {gops/(52.95/15.14):.2f} | {(52.95/15.14)*t_ms:.1f} | time +1.0%, GOPS −1.3% |
+| proposed (relation 2 as printed, 28 cyc/tile) | {row.time_ms:.2f} | {row.gops:.2f} | {row.gops_per_w:.2f} | {row.energy_mj:.1f} | time only matches under a different calibration (see below) |
+| cascaded-MSDF (un-merged, same datapath) | {casc.time_ms:.2f} | {casc.gops:.2f} | — | — | merged speedup = 34/28 = 1.214x |
+| CPU (measured on this host, float U-Net) | ~61 | ~46 | — | — | paper CPU row: 58.42 ms / 48.27 GOPS |
+
+**Reproduction findings**
+1. *Relation (2) vs Table 1*: relation (2) as printed (28 cycles/tile) can
+   match Table 1's **time** (calibration hw=80, base=32, depth=4 → 53.76 ms)
+   but then under-predicts GOPS by ~40%. Both columns are jointly consistent
+   only under a **16 = 2n cycle steady-state initiation interval**, i.e.
+   relation (2) is per-output *latency* while Table 1 assumes *pipelined
+   throughput*. We model both (`mma_tile_cycles` / `pipelined_tile_cycles`).
+2. *Table 1 internal consistency*: 5 of 6 rows satisfy
+   `energy = GOPS/(GOPS/W) x time` within 0.2%; the **MSDF row does not**
+   (6.99 W x 133.94 ms = 936.7 mJ vs printed 1644.77 mJ → implies 12.28 W).
+   Pinned in `tests/test_core.py::test_paper_table1_internal_consistency`.
+3. *Merged vs cascaded*: the MMA's per-tile win is 34→28 cycles (1.214x);
+   the paper's 2.52x claim vs the MSDF accelerator [11] additionally
+   reflects that design's different unit counts (cited measurement, not
+   derivable from relation 2).
+4. The bit-exact MSDF digit-serial simulator (`core/msdf.py`) confirms the
+   datapath: one MMA inner product = delta(2) + p_out(21) = 23 cycles
+   (relation 2's inner term adds ceil(log2 T_N)=5 pipeline-fill cycles), and
+   the 9-tap KPB tree completes in 39 cycles with digit-level pipelining —
+   vs 9x23 = 207 if units ran back-to-back.
+"""
+
+
+def _fleet_rows():
+    pairs = [
+        ("olmoe_1b_7b__train_4k__16_16", "olmoe_1b_7b__train_4k__16_16__epdp", "olmoe train_4k (EP+ep_dp)"),
+        ("olmoe_1b_7b__prefill_32k__16_16", "olmoe_1b_7b__prefill_32k__16_16__ep", "olmoe prefill_32k (EP)"),
+        ("dbrx_132b__train_4k__16_16", "dbrx_132b__train_4k__16_16__ep", "dbrx train_4k (EP)"),
+        ("dbrx_132b__prefill_32k__16_16", "dbrx_132b__prefill_32k__16_16__ep", "dbrx prefill_32k (EP)"),
+        ("minitron_4b__prefill_32k__16_16", "minitron_4b__prefill_32k__16_16__cp", "minitron prefill_32k (CP)"),
+        ("minitron_4b__train_4k__16_16", "minitron_4b__train_4k__16_16__cp", "minitron train_4k (CP)"),
+        ("whisper_large_v3__prefill_32k__16_16", "whisper_large_v3__prefill_32k__16_16__cp", "whisper prefill_32k (CP)"),
+        ("whisper_large_v3__train_4k__16_16", "whisper_large_v3__train_4k__16_16__cp", "whisper train_4k (CP)"),
+        ("yi_6b__decode_32k__16_16", "yi_6b__decode_32k__16_16__mma_int8", "yi decode_32k (int8 W+KV)"),
+        ("zamba2_7b__decode_32k__16_16", "zamba2_7b__decode_32k__16_16__dusfix", "zamba2 decode_32k (cache-layout fix)"),
+        ("zamba2_7b__long_500k__16_16", "zamba2_7b__long_500k__16_16__dusfix", "zamba2 long_500k (cache-layout fix)"),
+        ("olmoe_1b_7b__decode_32k__16_16", "olmoe_1b_7b__decode_32k__16_16__dusfix", "olmoe decode_32k (cache-layout fix)"),
+    ]
+    lines = []
+    for before, after, label in pairs:
+        try:
+            b, a = j(before), j(after)
+        except FileNotFoundError:
+            continue
+        tb, ta = terms(b), terms(a)
+        lines.append(
+            f"| {label} | {tb[3]:.1f} ms ({tb[4]}) | {ta[3]:.1f} ms ({ta[4]}) "
+            f"| **{tb[3]/ta[3]:.1f}x** | {b['useful_flops_fraction']:.2f}→"
+            f"{a['useful_flops_fraction']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def _cell(name):
+    try:
+        return f"{terms(j(name))[3]:.1f}"
+    except FileNotFoundError:
+        return "n/a"
+
+
+def _int8_rows():
+    pairs = [
+        ("yi_6b", "decode_32k"), ("granite_20b", "decode_32k"),
+        ("internvl2_76b", "decode_32k"), ("minitron_4b", "decode_32k"),
+        ("h2o_danube_3_4b", "long_500k"),
+    ]
+    lines = []
+    for arch, shape in pairs:
+        try:
+            b = j(f"{arch}__{shape}__16_16")
+            a = j(f"{arch}__{shape}__16_16__mma_int8")
+        except FileNotFoundError:
+            continue
+        tb, ta = terms(b), terms(a)
+        lines.append(f"| {arch} x {shape} | {tb[3]:.2f} ms | {ta[3]:.2f} ms "
+                     f"| {tb[3]/ta[3]:.2f}x |")
+    return "\n".join(lines)
+
+
+def perf_section():
+    o0 = j("olmoe_1b_7b__train_4k__16_16")
+    o1 = j("olmoe_1b_7b__train_4k__16_16__ep")
+    o2 = j("olmoe_1b_7b__train_4k__16_16__epdp")
+    m0 = j("minitron_4b__prefill_32k__16_16")
+    m1 = j("minitron_4b__prefill_32k__16_16__cp")
+    w0 = j("whisper_large_v3__prefill_32k__16_16")
+    w1 = j("whisper_large_v3__prefill_32k__16_16__cp")
+    y0 = j("yi_6b__decode_32k__16_16")
+    y1 = j("yi_6b__decode_32k__16_16__mma_int8")
+
+    def t(r):
+        return terms(r)
+
+    return f"""## §Perf — hillclimbing log (hypothesis → change → measure → validate)
+
+Three cells selected per the assignment: the worst roofline fraction
+(olmoe train_4k: bound/compute = {t(o0)[3]/t(o0)[0]:.0f}x), the most
+collective-bound (same cell; minitron prefill as the compute-replication
+counterpoint), and the cell most representative of the paper's technique
+(yi decode_32k: memory-bound serving, where the int8 digit-serial datapath
+pays).  All numbers are single-pod (16,16), per-chip, per-step.
+
+### Cell 1: olmoe_1b_7b x train_4k (MoE, 64e top-8)
+
+| iteration | compute | memory | collective | bound | useful |
+|---|---|---|---|---|---|
+| baseline (GSPMD scatter dispatch) | {t(o0)[0]:.0f} ms | {t(o0)[1]:.0f} ms | **{t(o0)[2]:.0f} ms** | {t(o0)[3]:.0f} ms | {o0['useful_flops_fraction']:.2f} |
+| iter 1: shard_map EP all-to-all | {t(o1)[0]:.0f} ms | {t(o1)[1]:.0f} ms | **{t(o1)[2]:.0f} ms** | {t(o1)[3]:.0f} ms | {o1['useful_flops_fraction']:.2f} |
+| iter 2: ep_dp rule set (DeepSpeed-MoE layout) | {t(o2)[0]:.0f} ms | {t(o2)[1]:.0f} ms | **{t(o2)[2]:.0f} ms** | {t(o2)[3]:.0f} ms | {o2['useful_flops_fraction']:.2f} |
+
+*Iter 1 hypothesis*: GSPMD cannot shard a data-dependent scatter; the
+dispatch replicates every token to every expert shard (baseline collective
+term 243 s ≈ 64 experts' worth of token traffic x layers). Napkin: explicit
+all-to-all moves only t_loc x top_k x d bytes/chip/layer ≈ 134 MB vs ~15 GB.
+**Confirmed**: 243 s → 1.6 s (150x) with `moe.ep=True`
+(`moe_ffn_ep`: local top-k routing → (M, E_loc, C, D) send buffer →
+`lax.all_to_all` over 'model' → local expert einsum → reverse a2a).
+
+*Iter 2 hypothesis*: a 1B-active model is over-TP'd at 16-way — the
+remaining term is per-layer SP/TP boundary collectives of the *dense* parts.
+Mapping batch over ('pod','data','model') and keeping ONLY experts on
+'model' (rule set `ep_dp`) removes them; the MoE a2a becomes the only
+activation collective. **Confirmed**: 1.62 s → 0.71 s; useful 0.57→0.69.
+
+*Iter 3 (analysis, stopped)*: remaining a2a = t_loc·k·d·2B x 2 dir x fwd+bwd
+x L ≈ 17 GB/chip-step — the routing-theoretic floor for top-8 at d=2048.
+Next lever would be hierarchical a2a or expert-choice routing (changes the
+paper-assigned architecture, out of scope). Total: **340x** on the dominant
+term; bound 243.3 s → 0.71 s.
+
+### Cell 2: minitron_4b x prefill_32k (24 heads on a 16-way model axis)
+
+| iteration | compute | memory | collective | bound | useful |
+|---|---|---|---|---|---|
+| baseline (head-sharding fails → replicated attention) | **{t(m0)[0]:.0f} ms** | {t(m0)[1]:.0f} ms | {t(m0)[2]:.0f} ms | {t(m0)[3]:.0f} ms | {m0['useful_flops_fraction']:.2f} |
+| iter 1: context-parallel fallback | {t(m1)[0]:.0f} ms | {t(m1)[1]:.0f} ms | **{t(m1)[2]:.0f} ms** | {t(m1)[3]:.0f} ms | {m1['useful_flops_fraction']:.2f} |
+
+*Hypothesis*: 24 q-heads (and kv=8) don't divide 16, so the divisibility
+guard leaves attention unsharded on 'model' → all attention FLOPs replicated
+16x (HLO flops 20x the 2·N·D model estimate at 32k where attention
+dominates). Fix: when heads % |model| != 0, shard **q's sequence dim** over
+'model' (context parallelism), kv replicated. **Confirmed**: compute
+{t(m0)[0]/1e3:.1f} s → {t(m1)[0]:.0f} ms (10x); dominance flips to the
+KV all-gather (~8.6 GB/step of the {o1 and m1['cost']['coll_bytes']/1e9:.0f} GB collective total).
+
+*Iter 2 (analysis, stopped)*: the remaining KV-AG floor could only move with
+ring attention (collective-permute pipeline), which GSPMD cannot synthesize
+from constraints — a Pallas ring-attention kernel is the future lever.
+Same fix applied to whisper's cross-attention (20 heads):
+prefill bound {t(w0)[3]/1e3:.1f} s → {t(w1)[3]:.0f} ms ({t(w0)[3]/t(w1)[3]:.1f}x), useful {w0['useful_flops_fraction']:.2f}→{w1['useful_flops_fraction']:.2f}.
+
+### Cell 3: yi_6b x decode_32k (the paper's technique at serving time)
+
+| iteration | compute | memory | collective | bound | bytes/token/chip |
+|---|---|---|---|---|---|
+| baseline (bf16 weights + bf16 KV) | {t(y0)[0]:.2f} ms | **{t(y0)[1]:.2f} ms** | {t(y0)[2]:.2f} ms | {t(y0)[3]:.2f} ms | {y0['hbm_traffic_model']['total']/1e6:.0f} MB |
+| iter 1: int8 weights + int8 KV cache (MMA datapath) | {t(y1)[0]:.2f} ms | **{t(y1)[1]:.2f} ms** | {t(y1)[2]:.2f} ms | {t(y1)[3]:.2f} ms | {y1['hbm_traffic_model']['total']/1e6:.0f} MB |
+
+*Hypothesis*: decode is memory-bound (weights {y0['hbm_traffic_model']['parts']['weights']/1e6:.0f} MB +
+cache {y0['hbm_traffic_model']['parts']['cache']/1e6:.0f} MB per token-step/chip); storing weights as
+pre-quantized int8 (+per-channel scales, `quantize_params_int8`) and the KV
+cache as int8 (static calibrated scale) halves both. **Confirmed**:
+bound {t(y0)[3]:.2f} → {t(y1)[3]:.2f} ms/token ({t(y0)[3]/t(y1)[3]:.2f}x) — on the FPGA this is
+exactly the paper's GOPS/W argument; on TPU it converts to ~2x decode
+throughput/J at the HBM roofline. Earlier-termination (planes<8) reduces the
+*compute* term further (progressive precision demo:
+`examples/progressive_decode.py` — planes=6 keeps top-1 agreement ≈ 1.0) but
+decode stays bandwidth-bound, so the bytes win is the one that pays here.
+
+*Iter 2 (analysis, stopped)*: next 1.5x would need int4 KV (+packing) or
+windowed caches (arch change). Weight bytes are at the int8 floor.
+
+### Fleet-wide effect of the three fixes (bonus cells, same mesh)
+
+The three §Perf changes are *framework* changes (EP a2a dispatch is now the
+MoE default, the CP fallback is automatic, int8 serving is a config flag), so
+every affected cell improves:
+
+| cell | before (bound) | after (bound) | speedup | useful before→after |
+|---|---|---|---|---|
+{_fleet_rows()}
+
+### Cell 4 (bonus): zamba2_7b x prefill_32k — packed-projection alignment
+
+*Hypothesis*: Mamba2's packed in_proj (z|xBC|dt, width 14576) splits at
+offsets 7168/14448 that don't align with 16-way shard boundaries (911/shard),
+forcing an all-to-all + collective-permutes per layer (baseline breakdown:
+1.0e10 a2a + 4.5e9 permute bytes per probe body).  Splitting into three
+independent projections (identical math and parameter count) makes each
+output cleanly shardable.  **Partially confirmed**: bound
+{_cell('zamba2_7b__prefill_32k__16_16')} → {_cell('zamba2_7b__prefill_32k__16_16__splitproj')} ms (-20%);
+the remaining term is the out_proj row-parallel all-reduce floor
+(~470 MB x 81 layers), inherent to TP-16 on a 7B model.
+
+### Cell 5 (bonus, hypothesis REFINED): whisper decode — cached cross-KV
+
+*Hypothesis*: whisper decode re-projects the 1500-frame encoder memory
+through every layer's cross-attn k/v each token — caching the cross-KV once
+per request (standard GPU-serving practice) should cut both compute and the
+5.03 ms collective term (the replicated 20-head projections AR per layer).
+*Napkin check first*: the cached cross-KV read is ~2 GB/chip/token — but the
+recompute path ALSO materializes the same k/v activations to HBM, so the
+memory term is equivalent; only the FLOPs and collectives differ.
+**Measured** (with the memory model extended to count per-request extras):
+baseline 1.04/3.67*/5.03 ms (compute/mem/coll, *mem understated by the same
+untracked activation traffic) → cached 0.28/6.11/0.01 ms.  Collectives
+eliminated, compute 3.7x down, and the honest bound is the cross-KV read
+floor (~6 ms at B=128 x 1500 enc positions) either way — the iteration's
+value is the *corrected memory model* and knowing decode is at its
+bandwidth floor, not the scheduling change itself.
+
+### int8 MMA serving across the family (beyond the 3 assigned cells)
+
+Decode bytes/token with `--quant mma_int8` (int8 weights + int8 KV):
+
+| arch x shape | bf16 bound | int8 bound | speedup |
+|---|---|---|---|
+{_int8_rows()}
+
+### Multi-pod validation of the optimized configs (2x16x16 = 512 chips)
+
+* olmoe train_4k + EP: {_cell('olmoe_1b_7b__train_4k__2_16_16__ep')} ms (multi-pod baseline was dispatch-bound like single-pod).
+  NOTE: the single-pod-optimal `ep_dp` rule set *regresses* at 512 chips
+  (batch 256 < chips → the prefix fallback leaves the model axis idle and
+  attention replicates): 5310 ms vs 836 ms with default rules + EP.  Layout
+  choice is scale-dependent — the rule-set config exists precisely for this.
+* zamba2 decode_32k cache-layout fix: {_cell('zamba2_7b__decode_32k__2_16_16__dusfix')} ms, memory-bound (vs 227.6 ms collective-bound before).
+* yi decode_32k int8: {_cell('yi_6b__decode_32k__2_16_16__mma_int8')} ms at 512 chips (batch 128 spread over 2x more chips).
+
+### Cell 6 (bonus): pipeline parallelism as the TP-collective alternative
+
+The dense train cells are bound by Megatron-TP boundary collectives
+(yi train: 4.6 s collective vs 1.1 s compute).  PP=16 x DP=16 (GPipe over
+the 'model' axis, `parallel/pipeline.py`: stage-sharded layer stacks +
+ppermute handoffs, differentiable end-to-end) compiles on the production
+mesh (`launch/dryrun_pp.py`): the collective schedule collapses to 60
+collective-permutes (~512 MB activations each, ~32 GB total vs TP's 230 GB)
++ 4 all-reduces — ~7x less collective traffic — at the cost of the GPipe
+bubble: (S-1)/(S-1+M) = 48% at M=16 (global batch 256 with DP=16 caps M;
+the bubble amortizes at larger global batch, or with 1F1B scheduling —
+future lever).  Correctness: PP(2) x DP(4) loss matches single-device
+within 2% and grads flow through every stage
+(`tests/test_pipeline.py`).
+
+### Cache-layout fixes found through the roofline (global)
+
+1. The decode KV cache was initially sharded on head_dim, conflicting with
+   head-sharded q — GSPMD emitted "involuntary full rematerialization"
+   (cache all-gathers): yi decode collective 2.2 GB → 17 MB (43 ms → 2.2 ms
+   bound) by sharding the cache on the *sequence* dim ('kv_seq' → model) and
+   computing decode attention as partial-softmax + O(B·H·d) psum.
+2. For archs whose kv-head count divides |model| (zamba2 kv=32, olmoe
+   kv=16), the per-token k/v were head-sharded BEFORE the cache
+   dynamic-update-slice, so GSPMD all-to-all'ed the entire cache between
+   head- and seq-sharded layouts every token (12 GB/step for zamba2).
+   Constraining decode k/v to the cache layout before the DUS:
+   zamba2 decode 455 → 8.6 ms (53x), long_500k 902 → 16 ms (56x),
+   olmoe decode 166 → 3.7 ms (45x) — all now memory-bound (weights+cache),
+   which is the physical floor for autoregressive decode.
+
+## §e2e — training driver
+
+`launch/train.py --arch yi_6b --smoke --steps 120 --batch 8 --seq 128` (CPU,
+reduced config): loss 6.82 → 4.15, ~110 ms/step, async checkpoints every 25
+steps, straggler watchdog active (0 flagged); `--resume` restarts from the
+latest atomic checkpoint (bit-determinism covered by
+tests/test_checkpoint.py).
+"""
+
+
+def main():
+    single = rl.markdown_tables("16x16")
+    multi = rl.markdown_tables("2x16x16")
+    opt = rl.markdown_tables("16x16", tag="opt")
+    opt_multi = rl.markdown_tables("2x16x16", tag="opt")
+    if opt_multi.count("\n") < 2:
+        opt_multi = "(multi-pod optimized sweep pending — see results/dryrun_opt_multi.log)"
+    dr_single = rl.dryrun_table("16x16")
+    # fleet summary: sum of bounds, baseline vs optimized defaults
+    tot_b = tot_o = 0.0
+    for p in sorted((ROOT / "results" / "dryrun").glob("*__16_16__opt.json")):
+        o = json.loads(p.read_text())
+        b = json.loads((p.parent / p.name.replace("__opt", "")).read_text())
+        tot_b += b["roofline"]["step_time_lower_bound_s"]
+        tot_o += o["roofline"]["step_time_lower_bound_s"]
+    fleet_summary = (f"{tot_b:.0f} s -> {tot_o:.0f} s ({tot_b/max(tot_o,1e-9):.1f}x)"
+                     if tot_o else "n/a")
+
+    md = f"""# EXPERIMENTS
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Container is CPU-only: all parallel results are **dry-run compiles**
+(lower → compile → memory/cost analysis on the real production meshes with
+512 forced host devices); arithmetic results run on CPU (Pallas kernels in
+interpret mode).
+
+{table1_section()}
+
+## §Dry-run — 40 cells x 2 meshes, all compile
+
+Meshes: single-pod `(16,16)` = 256 chips `('data','model')`; multi-pod
+`(2,16,16)` = 512 chips `('pod','data','model')` (the pod axis proves DCN-
+level data parallelism shards).  Every runnable (arch x shape) cell lowers
+AND compiles on both meshes — 33 runnable cells (7 `long_500k` cells are
+assignment-SKIPs for full-attention archs, see DESIGN.md) x 2 meshes = 66
+compiles, 0 failures (`results/dryrun_single.log`, `results/dryrun_multi.log`).
+
+Method notes (documented limitations):
+* `cost_analysis()` counts a `scan`/while body ONCE regardless of trip count
+  (verified empirically). True per-step FLOPs/bytes/collective-bytes are
+  recovered by compiling small UNROLLED probes (L=1,2; zamba2 {{6,9,12}}) and
+  extrapolating linearly in depth (`launch/dryrun.py::probe_costs`).
+* `bytes accessed` ignores fusion (>10x upper bound), so the roofline memory
+  term uses an explicit per-chip HBM traffic model
+  (`hlo_analysis.analytic_hbm_bytes`: weights x3/microbatch + grad-accum +
+  optimizer + saved residuals + logits for train; weights + cache + logits
+  for decode). Raw HLO bytes are kept in the JSONs as the upper bound.
+* Collective bytes = sum of operand bytes of every all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute in the post-SPMD
+  per-device HLO, probe-extrapolated. Terms are seconds/step/chip.
+* RWKV's per-token recurrence traffic is under-counted by cost analysis (its
+  sequential scan is not probe-recoverable); its memory term is a lower
+  bound — noted for rwkv6 rows.
+* whisper multi-pod train/prefill rows were compiled after the §Perf
+  context-parallel fix landed; its single-pod rows are the pre-fix baseline
+  (before/after recorded in §Perf).
+
+### Per-cell dry-run summary (single-pod)
+
+{dr_single}
+
+## §Roofline — single-pod (16,16), per chip per step
+
+Columns: the three terms in ms; dominant term; step-time lower bound;
+MODEL_FLOPS/HLO_FLOPS (useful fraction: 6·N·D train / 2·N·D inference —
+catches remat + replication waste; for 32k-prefill cells attention's
+quadratic FLOPs make <1 expected even at perfect sharding).
+
+{single}
+
+### Multi-pod (2,16,16) — proves the pod axis shards (512 chips)
+
+{multi}
+
+### Optimized defaults — the same 33 cells after the §Perf changes landed
+
+The EP MoE dispatch, CP-attention fallback, decode cache-layout fix and
+split mamba projections are now framework DEFAULTS; re-running the full
+single-pod sweep under them gives the shipping config's roofline
+(`--tag opt`; bf16 serving — the int8 deploy mode is the separate
+`--quant mma_int8` column in §Perf).  **Summed step-time lower bound across
+all 33 cells: {fleet_summary} — 14 cells improved, 0 regressed.**
+
+{opt}
+
+### Optimized defaults, multi-pod (2,16,16)
+
+{opt_multi}
+
+Reading the table (baseline analysis, one line per family):
+* **train cells** are collective-bound across the dense archs — the
+  inherent Megatron-TP/SP boundary traffic at 16-way model parallelism with
+  4k sequences; compute terms put the large dense archs (granite, internvl)
+  at 0.6–0.75 useful fraction (remat accounts for ~6/8 ideal).
+* **MoE cells** (olmoe, dbrx) were catastrophically dispatch-bound at
+  baseline → fixed in §Perf (shard_map EP all-to-all; 340x).
+* **decode cells** are memory-bound (weights+cache per token) — as expected;
+  ssm/hybrid decode (rwkv6, zamba2) carries O(1) state and is the cheapest.
+* **long_500k** runs for the three sub-quadratic archs; h2o-danube's
+  SWA-bounded KV and rwkv/zamba's O(1)/linear state fit per-chip HBM.
+* **prefill cells** split compute-bound (whisper, minitron — pre-fix
+  replication, see §Perf) vs collective-bound (the rest).
+
+{perf_section()}
+
+## §Train — end-to-end runs (CPU, reduced configs)
+
+* `examples/train_unet.py`: U-Net loss 1.09 → 0.25 in 60 steps; float acc
+  0.943 vs MMA-int8 0.944 (planes=8), 0.946 (planes=6), 0.884 (planes=4) —
+  the early-termination accuracy/arithmetic trade of the paper's Sec. 5.
+* `tests/test_checkpoint.py::test_trainer_restart_is_bit_deterministic`:
+  kill-and-resume reproduces the uninterrupted run bit-exactly (step-indexed
+  data + atomic checkpoints).
+* `tests/test_distributed.py`: 8-device sharded train step matches the
+  single-device loss; error-feedback int8 gradient compression drift stays
+  within one quant step over 20 steps.
+"""
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print(f"wrote EXPERIMENTS.md ({len(md)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Architecture configs: the 10 assigned archs + the paper's U-Net.
+
+``get_config(name)`` returns the full-size config; ``get_smoke_config(name)``
+a reduced same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "minitron_4b",
+    "yi_6b",
+    "h2o_danube_3_4b",
+    "granite_20b",
+    "internvl2_76b",
+    "olmoe_1b_7b",
+    "dbrx_132b",
+    "zamba2_7b",
+    "whisper_large_v3",
+    "rwkv6_3b",
+]
+
+
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.config()
+
+
+def get_smoke_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.smoke_config()

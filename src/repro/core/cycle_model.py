@@ -1,0 +1,259 @@
+"""Cycle-accurate analytical model of the FPGA accelerator (relations 2, 3).
+
+This reproduces the paper's performance model exactly as printed:
+
+  relation (2):  cycles = (delta_x+ + p_out + ceil(log2 T_N))
+                          * ceil(n_conv / KPBs) * ceil(N / T_N)
+  relation (3):  n_conv = (floor((R + 2P - k)/S) + 1)
+                          * (floor((C + 2P - k)/S) + 1) * ceil(M / T_M)
+
+with delta_x+ = 2, p_out = 2n + ceil(log2 T_N) = 21 (n=8, T_N=32), KPBs=16,
+T_M=1 — applied layer-by-layer to U-Net, plus the analytical latency of the
+*cascaded* MSDF design the paper improves on
+(delta_x + delta_+ * ceil(log2 T_N) + p_out per tile, Sec. 3.2).
+
+The U-Net workload is under-specified in the paper (no layer table).  We
+therefore *calibrate*: search standard U-Net configurations for the one whose
+relation-(2) time and GOPS jointly match Table 1's proposed-design row
+(53.25 ms, 52.95 GOPS), and report the calibrated config + residuals in
+EXPERIMENTS.md.  Baseline rows of Table 1 (bit-parallel, bit-serial, MSDF,
+CPU, GPU) are cited measurements from [12],[13],[11]; we reproduce their
+*derived* columns (GOPS, GOPS/W, energy = P*t) and check internal
+consistency.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+# ---- paper constants -------------------------------------------------------
+N_BITS = 8
+T_N = 32
+T_M = 1
+KPBS = 16
+K = 3
+DELTA_MMA = 2  # merged multiply-add initial delay (delta_x+)
+DELTA_ADD = 2  # online adder initial delay (delta_+)
+DELTA_MUL = 3  # standalone online multiplier initial delay (delta_x)
+FREQ_HZ = 100e6
+
+
+def p_out(n_bits: int = N_BITS, t_n: int = T_N) -> int:
+    return 2 * n_bits + math.ceil(math.log2(t_n))
+
+
+def mma_tile_cycles(n_bits: int = N_BITS, t_n: int = T_N) -> int:
+    """Inner term of relation (2): cycles per output tile, merged design."""
+    return DELTA_MMA + p_out(n_bits, t_n) + math.ceil(math.log2(t_n))
+
+
+def cascaded_tile_cycles(n_bits: int = N_BITS, t_n: int = T_N) -> int:
+    """Per-tile cycles of the un-merged design (Sec. 3.2): the multiplier and
+    every adder-tree level each pay their own initial delay."""
+    return DELTA_MUL + DELTA_ADD * math.ceil(math.log2(t_n)) + p_out(n_bits, t_n)
+
+
+def pipelined_tile_cycles(n_bits: int = N_BITS) -> int:
+    """Steady-state pipelined initiation interval: a new output every 2n
+    digit slots (the output stream is 2n+log2(T_N) digits, of which log2(T_N)
+    overlap the next tile's initial delay + tree fill).
+
+    Calibration finding (see EXPERIMENTS.md §Table1): relation (2) as printed
+    (28 cycles/tile) reproduces Table 1's *time* but not its *GOPS*; the two
+    columns are jointly consistent only under a ~16-cycle effective interval
+    — i.e. Table 1 assumes pipelined steady-state throughput while relation
+    (2) states per-output latency.  We model both.
+    """
+    return 2 * n_bits
+
+
+@dataclass(frozen=True)
+class ConvLayerSpec:
+    """One conv layer: input H x W x Cin -> Cout, k x k, stride S, pad P."""
+
+    h: int
+    w: int
+    cin: int
+    cout: int
+    k: int = K
+    stride: int = 1
+    pad: int = 1
+
+    @property
+    def out_h(self) -> int:
+        return (self.h + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.w + 2 * self.pad - self.k) // self.stride + 1
+
+    def n_conv(self, t_m: int = T_M) -> int:
+        """Relation (3)."""
+        return self.out_h * self.out_w * math.ceil(self.cout / t_m)
+
+    def macs(self) -> int:
+        return self.out_h * self.out_w * self.cout * self.cin * self.k * self.k
+
+    def ops(self) -> int:
+        return 2 * self.macs()
+
+    def cycles(self, *, tile_cycles: int | None = None, kpbs: int = KPBS) -> int:
+        """Relation (2) for this layer."""
+        tc = mma_tile_cycles() if tile_cycles is None else tile_cycles
+        return (
+            tc * math.ceil(self.n_conv() / kpbs) * math.ceil(self.cin / T_N)
+        )
+
+
+def unet_conv_layers(
+    hw: int = 128,
+    in_ch: int = 4,
+    base: int = 32,
+    depth: int = 4,
+    convs_per_stage: int = 2,
+) -> list[ConvLayerSpec]:
+    """Standard U-Net 3x3 conv stack (encoder/bottleneck/decoder with skip
+    concatenation).  2x2 up/down-sampling and the final 1x1 conv are not k=3
+    convolutions and run off the accelerator (paper Sec. 3.1: larger/other
+    kernels are decomposed or handled by reconfiguration)."""
+    layers: list[ConvLayerSpec] = []
+    ch = in_ch
+    size = hw
+    enc_ch = []
+    for d in range(depth):
+        c = base * (2**d)
+        layers.append(ConvLayerSpec(size, size, ch, c))
+        for _ in range(convs_per_stage - 1):
+            layers.append(ConvLayerSpec(size, size, c, c))
+        enc_ch.append(c)
+        ch = c
+        size //= 2
+    # bottleneck
+    c = base * (2**depth)
+    layers.append(ConvLayerSpec(size, size, ch, c))
+    for _ in range(convs_per_stage - 1):
+        layers.append(ConvLayerSpec(size, size, c, c))
+    ch = c
+    # decoder (skip concat doubles input channels of the first conv)
+    for d in reversed(range(depth)):
+        size *= 2
+        c = enc_ch[d]
+        layers.append(ConvLayerSpec(size, size, c + ch, c))
+        for _ in range(convs_per_stage - 1):
+            layers.append(ConvLayerSpec(size, size, c, c))
+        ch = c
+    return layers
+
+
+def model_cycles(layers: list[ConvLayerSpec], **kw) -> int:
+    return sum(l.cycles(**kw) for l in layers)
+
+
+def model_ops(layers: list[ConvLayerSpec]) -> int:
+    return sum(l.ops() for l in layers)
+
+
+@dataclass
+class PlatformRow:
+    """One column of Table 1.  Derived metrics follow the paper's
+    definitions: GOPS = ops/time, GOPS/W = GOPS/power, energy = power*time."""
+
+    name: str
+    time_ms: float
+    power_w: float
+    ops: int
+    freq_mhz: float | None = None
+    slices: int | None = None
+
+    @property
+    def gops(self) -> float:
+        return self.ops / (self.time_ms * 1e-3) / 1e9
+
+    @property
+    def gops_per_w(self) -> float:
+        return self.gops / self.power_w
+
+    @property
+    def energy_mj(self) -> float:
+        return self.power_w * self.time_ms
+
+    @property
+    def gops_per_slice_e4(self) -> float | None:
+        if self.slices is None:
+            return None
+        return self.gops / self.slices * 1e4
+
+
+# Table 1 as printed (for validation targets). Power back-derived from
+# GOPS / (GOPS/W); slices back-derived from GOPS / (GOPS/slice).
+PAPER_TABLE1 = {
+    "bit_parallel": dict(time_ms=57.20, gops=49.30, gops_w=2.65, e_mj=1064.43, aeff=10.59),
+    "bit_serial": dict(time_ms=232.26, gops=12.14, gops_w=0.88, e_mj=3210.81, aeff=3.98),
+    "msdf": dict(time_ms=133.94, gops=21.05, gops_w=3.01, e_mj=1644.77, aeff=2.61),
+    "gpu": dict(time_ms=7.31, gops=385.99, gops_w=5.51, e_mj=511.35, aeff=None),
+    "cpu": dict(time_ms=58.42, gops=48.27, gops_w=1.93, e_mj=1460.48, aeff=None),
+    "proposed": dict(time_ms=53.25, gops=52.95, gops_w=15.14, e_mj=186.20, aeff=17.43),
+}
+
+
+def proposed_row(layers: list[ConvLayerSpec]) -> PlatformRow:
+    """The proposed design, from relations (2)+(3) at 100 MHz.  Power is the
+    paper's implied accelerator power (GOPS / (GOPS/W) = 3.497 W)."""
+    cyc = model_cycles(layers)
+    t_ms = cyc / FREQ_HZ * 1e3
+    power = PAPER_TABLE1["proposed"]["gops"] / PAPER_TABLE1["proposed"]["gops_w"]
+    slices = PAPER_TABLE1["proposed"]["gops"] / (PAPER_TABLE1["proposed"]["aeff"] * 1e-4)
+    return PlatformRow(
+        "proposed(model)", t_ms, power, model_ops(layers), freq_mhz=100, slices=int(slices)
+    )
+
+
+def cascaded_row(layers: list[ConvLayerSpec]) -> PlatformRow:
+    """Same datapath but un-merged (multiplier + adder tree each with own
+    initial delay) — the paper's own analytical comparison, Sec. 3.2."""
+    tc = cascaded_tile_cycles()
+    cyc = model_cycles(layers, tile_cycles=tc)
+    t_ms = cyc / FREQ_HZ * 1e3
+    power = PAPER_TABLE1["msdf"]["gops"] / PAPER_TABLE1["msdf"]["gops_w"]
+    return PlatformRow("cascaded-msdf(model)", t_ms, power, model_ops(layers), freq_mhz=100)
+
+
+def calibrate_unet(
+    target_time_ms: float = 53.25,
+    target_gops: float = 52.95,
+    mode: str = "pipelined",
+) -> tuple[dict, list[ConvLayerSpec], float, float]:
+    """Search standard U-Net configs for the joint best match of Table 1's
+    (time, GOPS); returns (config, layers, time_err%, gops_err%).
+
+    mode='as_printed' uses relation (2) verbatim (28 cycles/tile; matches
+    Table 1 time only), mode='pipelined' uses the 2n-cycle steady-state
+    interval (jointly matches time and GOPS — see ``pipelined_tile_cycles``).
+    """
+    tile = mma_tile_cycles() if mode == "as_printed" else pipelined_tile_cycles()
+    best = None
+    for hw in (64, 80, 96, 112, 128, 144, 160, 176, 192, 208, 224, 240, 256):
+        for in_ch in (1, 3, 4):
+            for base in (8, 16, 24, 32, 48, 64):
+                for depth in (3, 4, 5):
+                    for cps in (1, 2):
+                        if hw % (2**depth):
+                            continue
+                        layers = unet_conv_layers(hw, in_ch, base, depth, cps)
+                        cyc = model_cycles(layers, tile_cycles=tile)
+                        t_ms = cyc / FREQ_HZ * 1e3
+                        gops = model_ops(layers) / (t_ms * 1e-3) / 1e9
+                        e_t = abs(t_ms - target_time_ms) / target_time_ms
+                        e_g = abs(gops - target_gops) / target_gops
+                        err = e_t + (e_g if mode == "pipelined" else 0.0)
+                        cfg = dict(hw=hw, in_ch=in_ch, base=base, depth=depth, convs_per_stage=cps)
+                        if best is None or err < best[0]:
+                            best = (err, cfg, layers, e_t * 100, e_g * 100)
+    assert best is not None
+    return best[1], best[2], best[3], best[4]
+
+
+# The calibrated U-Net used throughout (mode='pipelined'):
+#   input 80x80x4, base 48, depth 3, one 3x3 conv per stage
+#   -> 53.76 ms (+1.0%) and 52.25 GOPS (-1.3%) vs Table 1.
+CALIBRATED_UNET = dict(hw=80, in_ch=4, base=48, depth=3, convs_per_stage=1)

@@ -1,0 +1,57 @@
+"""Early termination / progressive precision — the MSDF property on TPU.
+
+MSDF arithmetic emits the most significant digits first, so a consumer can
+stop once it has enough precision (paper Sec. 2, and "future work": early
+termination).  In the bit-plane formulation the analogue is *plane
+truncation*: stop after the ``b`` most significant activation planes.
+
+Exact worst-case bound (planes are 0/1):
+
+    |S_full - S_b| = | sum_{j < 8-b} 2^j * (plane_j @ w) |
+                   <= (2**(8-b) - 1) * sum_k |w[k, n]|        per output n
+
+and with the midpoint correction (add E[dropped] = (2^(8-b)-1)/2 * colsum(w))
+the bound halves.  These bounds drive :func:`choose_planes`, which picks the
+fewest planes meeting a target relative error per layer — the serving-time
+knob (`quant.planes`) that gives LM decode the paper's progressive-precision
+property.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bitplane import N_BITS
+
+
+def truncation_bound(w_int8: jax.Array, planes: int, *, midpoint: bool = True) -> jax.Array:
+    """Worst-case |error| per output column of an int8 matmul truncated to
+    ``planes`` MSB activation planes.  w_int8: (K, N)."""
+    dropped = N_BITS - planes
+    l1 = jnp.sum(jnp.abs(w_int8.astype(jnp.int32)), axis=0)
+    bound = (2**dropped - 1) * l1
+    if midpoint:
+        bound = (bound + 1) // 2
+    return bound
+
+
+def output_scale_bound(w_int8: jax.Array) -> jax.Array:
+    """Scale of the full-precision output: 255 * colsum(|w|) (worst case for
+    uint8-offset activations) — used to turn absolute bounds relative."""
+    return 255 * jnp.sum(jnp.abs(w_int8.astype(jnp.int32)), axis=0)
+
+
+def choose_planes(w_int8: jax.Array, target_rel_err: float) -> int:
+    """Fewest planes such that worst-case relative error <= target."""
+    denom = jnp.maximum(output_scale_bound(w_int8).astype(jnp.float32), 1.0)
+    for b in range(1, N_BITS + 1):
+        rel = jnp.max(truncation_bound(w_int8, b).astype(jnp.float32) / denom)
+        if float(rel) <= target_rel_err:
+            return b
+    return N_BITS
+
+
+def empirical_rel_err(exact: jax.Array, approx: jax.Array) -> jax.Array:
+    """Measured relative error, for validating the bound in tests/examples."""
+    denom = jnp.maximum(jnp.max(jnp.abs(exact.astype(jnp.float32))), 1.0)
+    return jnp.max(jnp.abs(exact - approx).astype(jnp.float32)) / denom

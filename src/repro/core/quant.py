@@ -1,0 +1,87 @@
+"""Int8 quantization (FBGEMM-style symmetric) used by the MMA datapath.
+
+The paper quantizes U-Net with the FBGEMM backend to 8-bit fixed point before
+mapping convolutions onto the accelerator.  We mirror that: symmetric int8,
+per-output-channel scales for weights, per-tensor dynamic scale for
+activations.  ``fake_quant`` provides the straight-through estimator for
+quantization-aware training.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+class QTensor(NamedTuple):
+    """A quantized tensor: ``values * scale ~= original`` (scale broadcasts)."""
+
+    values: jax.Array  # int8
+    scale: jax.Array  # f32, broadcastable against values
+
+
+def quantize_weights(w: jax.Array, *, channel_axis: int = -1) -> QTensor:
+    """Symmetric per-channel int8 quantization (channel = output features)."""
+    reduce_axes = tuple(a for a in range(w.ndim) if a != channel_axis % w.ndim)
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32))
+
+
+def quantize_acts(x: jax.Array) -> QTensor:
+    """Symmetric per-tensor dynamic int8 quantization of activations."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32))
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+def fake_quant(x: jax.Array, *, channel_axis: int | None = None) -> jax.Array:
+    """Straight-through-estimator fake quantization for QAT."""
+    if channel_axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(a for a in range(x.ndim) if a != channel_axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -127, 127) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantized_matmul_scale(x_scale: jax.Array, w_scale: jax.Array) -> jax.Array:
+    """Output scale of an int8 x int8 -> int32 matmul."""
+    return x_scale * jnp.squeeze(w_scale)
+
+
+def quantize_params_int8(params, *, min_dim: int = 256):
+    """Serving transform: replace every linear ``{'w': bf16 (…,K,N)}`` whose
+    last two dims are >= min_dim with ``{'w_q': int8, 'w_scale': f32}``
+    (per-output-channel scales).  Embeddings / norms / biases / small LoRA
+    mats stay bf16.  Halves weight HBM bytes — the dominant term of
+    memory-bound decode (EXPERIMENTS.md §Perf iteration 3)."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and hasattr(node["w"], "ndim") and node["w"].ndim >= 2 \
+                    and node["w"].shape[-1] >= min_dim and node["w"].shape[-2] >= min_dim:
+                w = node["w"].astype(jnp.float32)
+                # per-output-channel, per-layer (reduce the contraction dim)
+                amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+                scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+                qv = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+                out = {k: v for k, v in node.items() if k != "w"}
+                out["w_q"] = qv
+                out["w_scale"] = scale.astype(jnp.float32)
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)

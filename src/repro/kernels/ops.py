@@ -1,0 +1,132 @@
+"""Jitted public wrappers around the Pallas MMA kernels.
+
+Handles: CPU-vs-TPU dispatch (interpret mode on CPU so the kernel body runs
+everywhere), padding to MXU-aligned block shapes, arbitrary leading batch
+dims, and the KPB-style conv mapping (taps folded into the contraction dim —
+the Pallas analogue of grouping k*k MMA units into a Kernel Processing
+Block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mma_matmul import BK, BM, BN, N_BITS, mma_matmul_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+def mma_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    planes: int = N_BITS,
+    signed: bool = True,
+    interpret: bool | None = None,
+    block: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """(..., K) int8 @ (K, N) int8 -> (..., N) int32 via the fused kernel."""
+    if interpret is None:
+        interpret = _on_cpu()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+
+    bm, bk, bn = block if block is not None else (BM, BK, BN)
+    # Shrink blocks for small problems (keeps interpret-mode tests fast);
+    # int8 sublane tiling on TPU wants the second-minor dim in multiples of 32.
+    bm, bk, bn = min(bm, _pad_to(m, 32)), min(bk, _pad_to(k, 128)), min(bn, _pad_to(n, 128))
+    mp, kp, np_ = _pad_to(m, bm), _pad_to(k, bk), _pad_to(n, bn)
+    # Zero-padding K is exact: padded w rows are 0, so both the dot and the
+    # signed colsum correction are unaffected (see kernel docstring).
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    w2 = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = mma_matmul_pallas(
+        x2, w2, planes=planes, signed=signed, interpret=interpret, bm=bm, bk=bk, bn=bn
+    )
+    return out[:m, :n].reshape(*lead, n)
+
+
+def mma_matmul_scaled(
+    x: jax.Array,
+    w: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    *,
+    planes: int = N_BITS,
+    signed: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Quantized-serving matmul with the dequant epilogue fused in-kernel:
+    (..., K) int8 @ (K, N) int8 -> (..., N) f32 scaled by x_scale*w_scale."""
+    from .mma_matmul import mma_matmul_scaled_pallas
+
+    if interpret is None:
+        interpret = _on_cpu()
+    lead = x.shape[:-1]
+    k, n = x.shape[-1], w.shape[-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+    bm, bk, bn = min(BM, _pad_to(m, 32)), min(BK, _pad_to(k, 128)), min(BN, _pad_to(n, 128))
+    mp, kp, np_ = _pad_to(m, bm), _pad_to(k, bk), _pad_to(n, bn)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    w2 = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    ws = jnp.pad(w_scale.reshape(-1), (0, np_ - n))
+    out = mma_matmul_scaled_pallas(
+        x2, w2, x_scale, ws, planes=planes, signed=signed, interpret=interpret,
+        bm=bm, bk=bk, bn=bn,
+    )
+    return out[:m, :n].reshape(*lead, n)
+
+
+def mma_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 1,
+    planes: int = N_BITS,
+    signed: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """KPB conv: NHWC int8 x (kh, kw, Cin, Cout) int8 -> NHWC int32.
+
+    The k*k spatial taps fold into the contraction dim exactly like the KPB
+    groups k*k MMA units over one window (Eq. 1): patches (n*oh*ow, kh*kw*cin)
+    @ weights (kh*kw*cin, cout), all through the single fused kernel.
+    """
+    n, h, w_, c = x.shape
+    kh, kw, cin, cout = w.shape
+    assert c == cin
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w_ + 2 * pad - kw) // stride + 1
+    patches = [
+        xp[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+        for i in range(kh)
+        for j in range(kw)
+    ]
+    patches = jnp.concatenate(patches, axis=-1)
+    wm = w.reshape(kh * kw * cin, cout)
+    out = mma_matmul(
+        patches.reshape(-1, kh * kw * cin),
+        wm,
+        planes=planes,
+        signed=signed,
+        interpret=interpret,
+    )
+    return out.reshape(n, oh, ow, cout)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the MMA kernels — independent of the kernel code.
+
+Plane truncation oracle: consuming only the ``b`` MSB planes of the offset
+activation ``u = x + 128`` equals masking off the low ``8-b`` bits of ``u``:
+
+    S_b * 2^(8-b) = (u & ~(2^(8-b)-1)) @ w  -  128 * colsum(w)
+
+so the oracle needs no Horner loop at all — one masked exact matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_BITS = 8
+
+
+def mma_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    planes: int = N_BITS,
+    signed: bool = True,
+    midpoint: bool = False,
+) -> jax.Array:
+    """Oracle for kernels.mma_matmul: (..., K) int8 @ (K, N) int8 -> int32."""
+    u = x.astype(jnp.int32)
+    if signed:
+        u = u + 128
+    dropped = N_BITS - planes
+    mask = ~((1 << dropped) - 1)
+    u = u & mask
+    out = jax.lax.dot_general(
+        u, w.astype(jnp.int32), (((u.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    colsum = jnp.sum(w.astype(jnp.int32), axis=0)
+    if midpoint and dropped:
+        out = out + ((2**dropped - 1) * colsum) // 2
+    if signed:
+        out = out - 128 * colsum
+    return out
+
+
+def mma_conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 1,
+    planes: int = N_BITS,
+    signed: bool = True,
+) -> jax.Array:
+    """Oracle for the KPB-style conv: NHWC int8 x (kh, kw, Cin, Cout) int8.
+
+    Built from the *matmul* oracle via explicit patch extraction so it shares
+    no code with the conv implementation under test.
+    """
+    n, h, w_, c = x.shape
+    kh, kw, cin, cout = w.shape
+    assert c == cin
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w_ + 2 * pad - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                xp[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            )
+    patches = jnp.concatenate(patches, axis=-1)  # (n, oh, ow, kh*kw*cin)
+    wm = w.transpose(0, 1, 2, 3).reshape(kh * kw * cin, cout)
+    out = mma_matmul_ref(
+        patches.reshape(-1, kh * kw * cin), wm, planes=planes, signed=signed
+    )
+    return out.reshape(n, oh, ow, cout)

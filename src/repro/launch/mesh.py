@@ -1,0 +1,25 @@
+"""Production meshes.  Functions (not module constants) so importing never
+touches jax device state — required for the smoke tests to see 1 device.
+
+Single pod: 16x16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the 'pod' axis
+carries pure data parallelism across pods (DCN-connected in production;
+gradient sync over 'pod' is the slice the grad-compression path targets).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 2):
+    """Tiny mesh over however many (forced) host devices exist — used by
+    sharding unit tests, not the dry-run."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,309 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell — the
+allocation-free stand-ins the dry-run lowers against.
+
+``build_cell(cfg, shape_name, mesh)`` returns a dict with:
+  kind: 'train' | 'prefill' | 'decode'
+  fn:   the step function to jit
+  args: tuple of abstract args (ShapeDtypeStructs)
+  in_shardings / out_shardings
+  meta: param counts etc. for the roofline
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.parallel import param_specs as pspecs
+from repro.parallel import sharding as shd
+from repro.serve import serve_step as ss
+from repro.train import train_step as ts
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def sharded_bytes(abstract_tree, shardings, mesh) -> int:
+    """Exact per-chip bytes of a sharded pytree (leaf bytes / shard count)."""
+    total = 0
+    sh_leaves = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+    )
+    ab_leaves = jax.tree.leaves(abstract_tree)
+    for leaf, sh in zip(ab_leaves, sh_leaves):
+        factor = 1
+        spec = getattr(sh, "spec", None)
+        if spec is not None:
+            for entry in spec:
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                for a in axes:
+                    factor *= mesh.shape[a]
+        total += math.prod(leaf.shape) * leaf.dtype.itemsize // factor
+    return total
+
+
+def param_count(abstract_params) -> int:
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(abstract_params))
+
+
+def active_param_count(abstract_params, cfg) -> int:
+    """MoE: count expert leaves at top_k/E utilization."""
+    total = 0
+    def is_expert(path):
+        return "moe/" in path and any(s in path for s in ("w_gate", "w_up", "w_down"))
+
+    def walk(path, leaf):
+        nonlocal total
+        n = math.prod(leaf.shape)
+        if is_expert(path) and cfg.moe.n_experts:
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+
+    import jax.tree_util as jtu
+    for kp, leaf in jtu.tree_flatten_with_path(abstract_params)[0]:
+        walk(pspecs._path_str(kp), leaf)
+    return total
+
+
+def _abstract_params(cfg, *, max_dec_pos: int = 4096):
+    mod = models.build(cfg)
+    key = jax.random.PRNGKey(0)
+
+    def init():
+        if cfg.family == "encdec":
+            p = mod.init_params(key, cfg, max_dec_pos=max_dec_pos)
+        else:
+            p = mod.init_params(key, cfg)
+        if cfg.quant.weights_int8:
+            from repro.core.quant import quantize_params_int8
+
+            p = quantize_params_int8(p)
+        return p
+
+    return jax.eval_shape(init)
+
+
+def _train_batch_specs(cfg, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    mb = cfg.microbatches
+    def with_mb(shp):
+        if mb > 1:
+            return (mb, shp[0] // mb) + shp[1:]
+        return shp
+    batch = {"tokens": sds(with_mb((b, s + 1)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = sds(with_mb((b, cfg.vlm_patches, cfg.d_model)), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = sds(with_mb((b, cfg.enc_seq, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+def _rules(cfg):
+    return shd.RULE_SETS.get(getattr(cfg, "shard_rules", "default"),
+                             shd.DEFAULT_RULES)
+
+
+def build_cell(cfg, shape_name: str, mesh):
+    shape = SHAPES[shape_name]
+    with shd.use_mesh(mesh, _rules(cfg)):
+        if shape.kind == "train":
+            return _build_train(cfg, shape, mesh)
+        if shape.kind == "prefill":
+            return _build_prefill(cfg, shape, mesh)
+        return _build_decode(cfg, shape, mesh)
+
+
+def _mesh_sizes(mesh):
+    dpsize = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dpsize *= mesh.shape[a]
+    return dpsize, mesh.shape.get("model", 1)
+
+
+def _build_train(cfg, shape, mesh):
+    ab_state = ts.abstract_state(cfg)
+    batch = _train_batch_specs(cfg, shape)
+    st_sh = ts.state_shardings(ab_state, cfg, mesh)
+    b_sh = ts.batch_shardings(batch, mesh, mb_leading=cfg.microbatches > 1)
+
+    def step_fn(state, b):
+        with shd.use_mesh(mesh, _rules(cfg)):
+            return ts.train_step(state, b, cfg)
+
+    jitted = jax.jit(
+        step_fn, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None),
+        donate_argnums=(0,),
+    )
+    n = param_count(ab_state["params"])
+    # analytic-memory inputs (per chip)
+    dp, ms = _mesh_sizes(mesh)
+    mb = cfg.microbatches
+    b_loc = shape.global_batch // dp // mb
+    s_loc = shape.seq_len // ms if cfg.seq_shard else shape.seq_len
+    v_sh = cfg.vocab // ms if cfg.vocab % ms == 0 else cfg.vocab
+    n_layers_eff = cfg.n_layers + (cfg.enc_layers if cfg.family == "encdec" else 0)
+    mem_in = dict(
+        w_bytes=sharded_bytes(ab_state["params"], st_sh["params"], mesh),
+        opt_bytes=(
+            sharded_bytes(ab_state["opt"].master, st_sh["opt"].master, mesh)
+            + sharded_bytes(ab_state["opt"].m, st_sh["opt"].m, mesh)
+            + sharded_bytes(ab_state["opt"].v, st_sh["opt"].v, mesh)
+        ),
+        resid_bytes=b_loc * max(s_loc, 1) * cfg.d_model * 2,
+        n_layers=n_layers_eff,
+        logits_bytes=b_loc * shape.seq_len * v_sh * 4,
+        microbatches=mb,
+    )
+    return dict(
+        kind="train", fn=jitted, args=(ab_state, batch),
+        meta=dict(
+            params=n,
+            active_params=active_param_count(ab_state["params"], cfg),
+            tokens=shape.global_batch * shape.seq_len,
+            mem_in=mem_in,
+        ),
+    )
+
+
+def _serve_params(cfg, mesh, *, max_dec_pos=4096):
+    """Abstract params + shardings for serving.  TP by default; auto-switch
+    to 2-D (model x data, FSDP-style weight gathering) when the TP-sharded
+    bf16 weights would not fit HBM (>10 GiB/chip) — logged in the cell."""
+    ab = _abstract_params(cfg, max_dec_pos=max_dec_pos)
+    n = param_count(ab)
+    msize = mesh.shape.get("model", 1)
+    per_chip = 2 * n / msize
+    mode = "tp"
+    if per_chip > 10 * (1 << 30):
+        mode = "2d"
+    p_sh = pspecs.named_shardings(ab, cfg, mesh)
+    if mode == "2d":
+        def widen(path, sh, leaf):
+            spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+            dpa = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            dsize = 1
+            for a in dpa:
+                dsize *= mesh.shape[a]
+            for i, (sp, dim) in enumerate(zip(spec, leaf.shape)):
+                if sp is None and dim % dsize == 0 and dim >= dsize:
+                    spec[i] = dpa if len(dpa) > 1 else dpa[0]
+                    break
+            return NamedSharding(mesh, P(*spec))
+
+        import jax.tree_util as jtu
+        p_sh = jtu.tree_map_with_path(
+            lambda kp, sh, leaf: widen(pspecs._path_str(kp), sh, leaf), p_sh, ab
+        )
+    return ab, p_sh, mode
+
+
+def _build_prefill(cfg, shape, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    ab_params, p_sh, mode = _serve_params(cfg, mesh, max_dec_pos=s + 1)
+    prefill = ss.make_prefill(cfg)
+    tokens = sds((b, s), jnp.int32)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = sds((b, cfg.vlm_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        extras["frames"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    dpa = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = dpa if len(dpa) > 1 else dpa[0]
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    ex_sh = {k: NamedSharding(mesh, P(dp, *([None] * (len(v.shape) - 1))))
+             for k, v in extras.items()}
+
+    def fn(params, tokens, extras):
+        with shd.use_mesh(mesh, _rules(cfg)):
+            return prefill(params, tokens, extras)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, ex_sh))
+    n = param_count(ab_params)
+    dp, ms = _mesh_sizes(mesh)
+    b_loc = b // dp if b % dp == 0 else b
+    s_loc = s // ms if cfg.seq_shard else s
+    v_sh = cfg.vocab // ms if cfg.vocab % ms == 0 else cfg.vocab
+    n_layers_eff = cfg.n_layers + (cfg.enc_layers if cfg.family == "encdec" else 0)
+    mem_in = dict(
+        w_bytes=sharded_bytes(ab_params, p_sh, mesh),
+        resid_bytes=b_loc * max(s_loc, 1) * cfg.d_model * 2,
+        n_layers=n_layers_eff,
+        logits_bytes=b_loc * s * v_sh * 4,
+    )
+    return dict(
+        kind="prefill", fn=jitted, args=(ab_params, tokens, extras),
+        meta=dict(params=n, active_params=active_param_count(ab_params, cfg),
+                  tokens=b * s, serve_mode=mode, mem_in=mem_in),
+    )
+
+
+def _build_decode(cfg, shape, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    ab_params, p_sh, mode = _serve_params(cfg, mesh, max_dec_pos=s + 1)
+    decode, ab_cache = ss.make_decode(cfg, b, s)
+    c_sh = ss.cache_shardings(ab_cache, cfg, mesh, b, max_seq=s)
+    tokens = sds((b, 1), jnp.int32)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["memory"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        # per-request precomputed cross-attention K/V (whisper serving: the
+        # encoder memory is projected once at admission, not every token)
+        xkv = (cfg.n_layers, b, cfg.enc_seq, cfg.n_kv_heads, cfg.hd)
+        extras["cross_kv"] = {"k": sds(xkv, jnp.bfloat16),
+                              "v": sds(xkv, jnp.bfloat16)}
+    dpa = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = dpa if len(dpa) > 1 else dpa[0]
+    dsize = 1
+    for a in dpa:
+        dsize *= mesh.shape[a]
+    tok_sh = NamedSharding(mesh, P(dp, None) if b % dsize == 0 else P())
+
+    def _ex_sharding(v):
+        axes: list = [None] * len(v.shape)
+        if b % dsize == 0:
+            for i, d_ in enumerate(v.shape):
+                if d_ == b:
+                    axes[i] = dp
+                    break
+        return NamedSharding(mesh, P(*axes))
+
+    ex_sh = jax.tree.map(_ex_sharding, extras)
+    idx = sds((), jnp.int32)
+
+    def fn(params, tokens, cache, index, extras):
+        with shd.use_mesh(mesh, _rules(cfg)):
+            return decode(params, tokens, cache, index, extras)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_sh, tok_sh, c_sh, NamedSharding(mesh, P()), ex_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+    n = param_count(ab_params)
+    dp, ms = _mesh_sizes(mesh)
+    b_loc = b // dp if b % dp == 0 else b
+    v_sh = cfg.vocab // ms if cfg.vocab % ms == 0 else cfg.vocab
+    # per-token reads: KV cache + any per-request extras (encdec cross-KV /
+    # encoder memory) — both cross HBM every step.
+    extras_bytes = sharded_bytes(extras, ex_sh, mesh) if extras else 0
+    mem_in = dict(
+        w_bytes=sharded_bytes(ab_params, p_sh, mesh),
+        cache_bytes=sharded_bytes(ab_cache, c_sh, mesh) + extras_bytes,
+        logits_bytes=b_loc * v_sh * 4,
+        n_layers=cfg.n_layers,
+    )
+    return dict(
+        kind="decode", fn=jitted, args=(ab_params, tokens, ab_cache, idx, extras),
+        meta=dict(params=n, active_params=active_param_count(ab_params, cfg),
+                  tokens=b, serve_mode=mode, mem_in=mem_in),
+    )

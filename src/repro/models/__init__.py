@@ -1,0 +1,21 @@
+"""Model zoo: every assigned architecture family, built from shared layers.
+
+All stacks are ``lax.scan``-rolled over layers (O(1) HLO size in depth) and
+annotated with logical-axis sharding constraints (repro.parallel.sharding).
+"""
+from . import layers  # noqa: F401
+
+
+def build(cfg):
+    """Return the model module for a config (forward/init/decode API)."""
+    from . import rwkv6, transformer, unet, whisper, zamba2
+
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "hybrid": zamba2,
+        "ssm": rwkv6,
+        "encdec": whisper,
+        "unet": unet,
+    }[cfg.family]

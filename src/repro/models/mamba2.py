@@ -1,0 +1,178 @@
+"""Mamba2 (SSD) block — chunked state-space scan, plus O(1)-state decode.
+
+Training/prefill uses the chunk-parallel SSD form (intra-chunk quadratic +
+inter-chunk state carry via lax.scan), so the sequence dim never appears
+squared at full length.  Decode carries the (H, N, P) state — this is what
+makes ``long_500k`` runnable for the hybrid/ssm archs.
+
+Shapes follow the Mamba2 paper: d_inner = expand*d_model, P = head_dim,
+H = d_inner/P heads, N = ssm_state, single B/C group (G=1, like Zamba2).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from . import layers
+
+CHUNK = 256
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = d_inner // p
+    n = cfg.ssm_state
+    return d_inner, h, p, n
+
+
+def init_mamba_block(key, cfg) -> dict:
+    d_inner, h, p, n = dims(cfg)
+    ks = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * n  # x plus B and C streams get the short conv
+    # Three separate projections instead of one packed in_proj: identical
+    # math/params, but each output is independently shardable — the packed
+    # layout's split offsets (d_inner, 2*d_inner+2n) don't align with 16-way
+    # shard boundaries and forced an all-to-all + permutes per layer
+    # (zamba2 prefill baseline — EXPERIMENTS.md §Perf iteration 4).
+    return {
+        "z_proj": layers.init_linear(ks[0], cfg.d_model, d_inner),
+        "xbc_proj": layers.init_linear(ks[3], cfg.d_model, conv_dim),
+        "dt_proj": layers.init_linear(ks[4], cfg.d_model, h),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((conv_dim,), jnp.bfloat16),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": layers.init_norm(d_inner),
+        "out_proj": layers.init_linear(ks[2], d_inner, cfg.d_model),
+    }
+
+
+def _short_conv(p, xbc, conv_state=None):
+    """Depthwise causal conv, window cfg.ssm_conv.  conv_state: (B, W-1, C)
+    for decode; returns (out, new_state)."""
+    w = p["conv_w"].astype(xbc.dtype)  # (W, C)
+    win = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (win - 1,) + xbc.shape[2:], xbc.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)
+        new_state = xp[:, -(win - 1) :, :]
+    else:
+        xp = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        new_state = xp[:, -(win - 1) :, :]
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i] for i in range(win)
+    ) + p["conv_b"].astype(xbc.dtype)
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(x, dt, a, bmat, cmat):
+    """Chunk-parallel SSD.  x: (B, S, H, P); dt: (B, S, H); a: (H,) (>0 decay
+    rates); bmat/cmat: (B, S, N).  Returns y: (B, S, H, P)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = CHUNK
+    nc = s // q
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+
+    xs = x.reshape(b, nc, q, h, p)
+    dts = dt.reshape(b, nc, q, h)
+    bs = bmat.reshape(b, nc, q, n)
+    cs = cmat.reshape(b, nc, q, n)
+
+    # log-decay per step: s_t = -dt_t * a  (a > 0)
+    ls = -dts * a[None, None, None, :]  # (B, NC, Q, H)
+    cum = jnp.cumsum(ls, axis=2)  # within-chunk cumulative log decay
+
+    # Intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j  (else 0)
+    li = cum[:, :, :, None, :]  # (B,NC,Q,1,H)
+    lj = cum[:, :, None, :, :]  # (B,NC,1,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], li - lj, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", cs, bs)  # (B,NC,Q,Q)
+    att = cb[..., None] * decay * dts[:, :, None, :, :]  # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xs)
+
+    # Chunk-final states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dts  # (B,NC,Q,H)
+    sc = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bs, w_end, xs)  # (B,NC,H,N,P)
+
+    # Inter-chunk scan: state_{c} = exp(sum ls_c) state_{c-1} + S_c
+    total = jnp.exp(cum[:, :, -1, :])  # (B,NC,H)
+
+    def scan_fn(carry, inp):
+        tot, s_c = inp
+        new = tot[..., None, None] * carry + s_c
+        return new, carry  # emit the *incoming* state for chunk c
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (total.transpose(1, 0, 2), sc.transpose(1, 0, 2, 3, 4).astype(jnp.float32)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,NC,H,N,P)
+
+    # Inter-chunk contribution: y_i += C_i . (exp(cum_i) * state_prev)
+    w_in = jnp.exp(cum)  # (B,NC,Q,H)
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", cs, w_in, prev_states.astype(cs.dtype)
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y
+
+
+def mamba_forward(p, x, cfg, *, state=None):
+    """x: (B, S, D).  state (decode): dict(conv=(B,W-1,C), ssm=(B,H,N,P)).
+    Returns (out, new_state)."""
+    d_inner, h, pd, n = dims(cfg)
+    bsz, s, _ = x.shape
+    z = layers.linear(p["z_proj"], x, cfg.quant)
+    xbc = layers.linear(p["xbc_proj"], x, cfg.quant)
+    dt = layers.linear(p["dt_proj"], x, cfg.quant)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = jnp.exp(p["a_log"])  # (H,) positive decay rates
+
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _short_conv(p, xbc, conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(bsz, s, h, pd)
+    xs = constrain(xs, "batch", None, "heads", None)
+
+    if state is None:
+        y = _ssd_chunked(xs, dt, a, bmat, cmat)
+        new_ssm = None  # training path does not emit state
+    else:
+        # Single-step recurrence: state' = exp(-dt a) state + dt B x^T
+        assert s == 1
+        ssm = state["ssm"]  # (B,H,N,P) f32
+        dt1 = dt[:, 0, :]  # (B,H)
+        decay = jnp.exp(-dt1 * a[None, :])  # (B,H)
+        bx = jnp.einsum(
+            "bn,bh,bhp->bhnp", bmat[:, 0].astype(jnp.float32), dt1,
+            xs[:, 0].astype(jnp.float32),
+        )
+        new_ssm = decay[..., None, None] * ssm + bx
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), new_ssm)
+        y = y[:, None]  # (B,1,H,P)
+
+    y = y.astype(x.dtype) + xs * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_inner)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
+    out = layers.linear(p["out_proj"], y, cfg.quant)
+    new_state = None if state is None else {"conv": new_conv, "ssm": new_ssm}
+    return out, new_state
+
+
+def init_state(cfg, batch: int) -> dict:
+    d_inner, h, pd, n = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, h, n, pd), jnp.float32),
+    }

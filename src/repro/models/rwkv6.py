@@ -1,0 +1,232 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Time-mix: per-head state S (P x P) updated as
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with w_t data-dependent (LoRA on the shifted-token mix), per RWKV6.  The
+sequence recurrence is a lax.scan (O(1) HLO, O(S) wall time); decode carries
+(S, last-token) state — attention-free, so ``long_500k`` is in-family.
+
+Channel-mix: token-shift + squared-ReLU MLP (d_ff = 3.5 * d_model for the
+3B Finch config).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from . import layers
+
+LORA_R = 64
+
+
+def dims(cfg):
+    p = cfg.ssm_head_dim or 64
+    h = cfg.d_model // p
+    return h, p
+
+
+def init_time_mix(key, cfg) -> dict:
+    h, p = dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    return {
+        "mix_base": jnp.zeros((5, d), jnp.bfloat16),  # r,k,v,w,g interpolants
+        "mix_lora_a": layers.init_linear(ks[0], d, LORA_R * 5),
+        "mix_lora_b": (jax.random.normal(ks[1], (5, LORA_R, d), jnp.float32) * 0.01
+                       ).astype(jnp.bfloat16),
+        "wr": layers.init_linear(ks[2], d, d),
+        "wk": layers.init_linear(ks[3], d, d),
+        "wv": layers.init_linear(ks[4], d, d),
+        "wg": layers.init_linear(ks[5], d, d),
+        "wo": layers.init_linear(ks[6], d, d),
+        "w_base": jnp.full((d,), -6.0, jnp.float32),  # decay bias (pre -exp)
+        "w_lora_a": layers.init_linear(ks[7], d, LORA_R),
+        "w_lora_b": (jax.random.normal(ks[8], (LORA_R, d), jnp.float32) * 0.01
+                     ).astype(jnp.bfloat16),
+        "u": jnp.zeros((h, p), jnp.float32),  # bonus for current token
+        "ln_x": layers.init_norm(d),
+    }
+
+
+def init_channel_mix(key, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.zeros((d,), jnp.bfloat16),
+        "mix_r": jnp.zeros((d,), jnp.bfloat16),
+        "wk": layers.init_linear(ks[0], d, cfg.d_ff),
+        "wv": layers.init_linear(ks[1], cfg.d_ff, d),
+        "wr": layers.init_linear(ks[2], d, d),
+    }
+
+
+def init_block(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_norm(cfg.d_model),
+        "time_mix": init_time_mix(k1, cfg),
+        "ln2": layers.init_norm(cfg.d_model),
+        "channel_mix": init_channel_mix(k2, cfg),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    bkeys = jax.random.split(kb, cfg.n_layers)
+    return {
+        "embed": layers.init_embedding(ke, cfg.vocab, cfg.d_model),
+        "blocks": jax.vmap(lambda k: init_block(k, cfg))(bkeys),
+        "ln_f": layers.init_norm(cfg.d_model),
+        "head": layers.init_linear(kh, cfg.d_model, cfg.vocab),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried last token at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def time_mix(p, x, cfg, *, state=None):
+    """x: (B,S,D) -> (out, new_state); state = {"s": (B,H,P,P), "x": (B,D)}."""
+    h, pd = dims(cfg)
+    b, s, d = x.shape
+    xprev = _shift(x, None if state is None else state["x"])
+    # data-dependent interpolation (the RWKV6 "ddlerp")
+    delta = xprev - x
+    lora = jnp.tanh(layers.linear(p["mix_lora_a"], x).reshape(b, s, 5, LORA_R))
+    dyn = jnp.einsum("bsfr,frd->bsfd", lora, p["mix_lora_b"].astype(x.dtype))
+    mix = p["mix_base"].astype(x.dtype)[None, None] + dyn  # (B,S,5,D)
+    xr, xk, xv, xw, xg = [
+        x + delta * mix[:, :, i, :] for i in range(5)
+    ]
+    r = layers.linear(p["wr"], xr, cfg.quant).reshape(b, s, h, pd)
+    k = layers.linear(p["wk"], xk, cfg.quant).reshape(b, s, h, pd)
+    v = layers.linear(p["wv"], xv, cfg.quant).reshape(b, s, h, pd)
+    g = jax.nn.silu(layers.linear(p["wg"], xg, cfg.quant).astype(jnp.float32))
+    # data-dependent decay  w_t = exp(-exp(base + lora_w(xw)))
+    wl = jnp.tanh(layers.linear(p["w_lora_a"], xw))
+    wd = layers.linear({"w": p["w_lora_b"]}, wl)
+    logw = p["w_base"][None, None, :] + wd.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw)).reshape(b, s, h, pd)  # in (0,1)
+
+    r = constrain(r, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+
+    u = p["u"].astype(jnp.float32)
+
+    def step(carry, inp):
+        s_state = carry  # (B,H,P,P) f32
+        rt, kt, vt, wt = inp  # each (B,H,P)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,P,P)
+        y = jnp.einsum("bhp,bhpq->bhq", rt, s_state + u[None, :, :, None] * kv)
+        new = wt[..., :, None] * s_state + kv
+        return new, y
+
+    s0 = (
+        jnp.zeros((b, h, pd, pd), jnp.float32)
+        if state is None
+        else state["s"]
+    )
+    seq = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    s_final, ys = jax.lax.scan(step, s0, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)  # (B,S,H,P)->(B,S,D)
+    y = layers.rmsnorm(p["ln_x"], y.astype(x.dtype), cfg.norm_eps)
+    out = layers.linear(p["wo"], (y.astype(jnp.float32) * g).astype(x.dtype), cfg.quant)
+    new_state = None if state is None else {"s": s_final, "x": x[:, -1, :]}
+    return out, new_state
+
+
+def channel_mix(p, x, cfg, *, last=None):
+    xprev = _shift(x, last)
+    xk = x + (xprev - x) * p["mix_k"].astype(x.dtype)
+    xr = x + (xprev - x) * p["mix_r"].astype(x.dtype)
+    k = layers.linear(p["wk"], xk, cfg.quant)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    k = constrain(k, "batch", None, "ffn")
+    kv = layers.linear(p["wv"], k, cfg.quant)
+    r = jax.nn.sigmoid(layers.linear(p["wr"], xr, cfg.quant).astype(jnp.float32))
+    out = (r * kv.astype(jnp.float32)).astype(x.dtype)
+    new_last = None if last is None else x[:, -1, :]
+    return out, new_last
+
+
+def forward(params, tokens, cfg, *, state=None, **_):
+    """state (decode): {"tm": {"s","x"} stacked (L,...), "cm_x": (L,B,D)}."""
+    x = layers.embed(params["embed"], tokens)
+    x = constrain(x, "batch", "seq" if cfg.seq_shard else None, None)
+
+    def body(carry, xs):
+        h = carry
+        if state is None:
+            blk = xs
+            tm, _ = time_mix(blk["time_mix"], layers.rmsnorm(blk["ln1"], h, cfg.norm_eps), cfg)
+            h = h + tm
+            cm, _ = channel_mix(blk["channel_mix"], layers.rmsnorm(blk["ln2"], h, cfg.norm_eps), cfg)
+            h = h + cm
+            return constrain(h, "batch", "seq" if cfg.seq_shard else None, None), None
+        blk, tm_s, tm_x, cm_x = xs
+        tm, new_tm = time_mix(
+            blk["time_mix"], layers.rmsnorm(blk["ln1"], h, cfg.norm_eps), cfg,
+            state={"s": tm_s, "x": tm_x},
+        )
+        h = h + tm
+        cm, new_cm = channel_mix(
+            blk["channel_mix"], layers.rmsnorm(blk["ln2"], h, cfg.norm_eps), cfg,
+            last=cm_x,
+        )
+        h = h + cm
+        return h, (new_tm["s"], new_tm["x"], new_cm)
+
+    fn = body
+    if cfg.remat == "full" and state is None:
+        fn = jax.checkpoint(body, prevent_cse=False)
+
+    if state is None:
+        x, _ = jax.lax.scan(fn, x, params["blocks"], unroll=cfg.scan_unroll)
+        new_state = None
+    else:
+        x, ys = jax.lax.scan(
+            fn, x, (params["blocks"], state["tm_s"], state["tm_x"], state["cm_x"]),
+            unroll=cfg.scan_unroll,
+        )
+        new_state = {"tm_s": ys[0], "tm_x": ys[1], "cm_x": ys[2]}
+
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = layers.linear(params["head"], x, cfg.quant)
+    logits = constrain(logits, "batch", None, "vocab")
+    return (logits, new_state) if state is not None else logits
+
+
+def init_state(cfg, batch: int) -> dict:
+    h, pd = dims(cfg)
+    return {
+        "tm_s": jnp.zeros((cfg.n_layers, batch, h, pd, pd), jnp.float32),
+        "tm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.bfloat16),
+        "cm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.bfloat16),
+    }
+
+
+def loss_fn(params, batch, cfg):
+    tokens = batch["tokens"][:, :-1]
+    targets = batch["tokens"][:, 1:]
+    logits = forward(params, tokens, cfg).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll}
+
+
+def decode_step(params, tokens, state, cache_index, cfg, **_):
+    del cache_index
+    return forward(params, tokens, cfg, state=state)

@@ -1,0 +1,183 @@
+"""Decoder-only transformer LM — families 'dense', 'moe', 'vlm'.
+
+Layer stacks are lax.scan-rolled (stacked params, O(1) HLO in depth — keeps
+512-device SPMD compiles tractable and real-cluster compile times sane).
+Sequence parallelism on the residual stream, TP inside blocks, EP for MoE.
+VLM ('vlm'): a prefix of precomputed patch embeddings (the stub modality
+frontend per the assignment) is concatenated before the token embeddings.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from . import layers, moe as moe_lib
+
+
+# ------------------------------------------------------------------ params
+
+
+def init_block(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": layers.init_norm(cfg.d_model),
+        "attn": layers.init_attention(ks[0], cfg),
+        "ln2": layers.init_norm(cfg.d_model),
+    }
+    if cfg.moe.n_experts:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = layers.init_mlp(ks[2], cfg)
+    return p
+
+
+def init_params(key, cfg) -> dict:
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    p = {
+        "embed": layers.init_embedding(k_emb, cfg.vocab, cfg.d_model),
+        "blocks": blocks,  # every leaf stacked (L, ...)
+        "ln_f": layers.init_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = layers.init_linear(k_head, cfg.d_model, cfg.vocab)
+    return p
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _block(p, x, cfg, *, positions, cache=None, cache_index=None):
+    h, new_cache = layers.attention(
+        p["attn"], layers.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, cache=cache, cache_index=cache_index,
+    )
+    x = x + h
+    x = constrain(x, "batch", "seq" if cfg.seq_shard else None, None)
+    h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe.n_experts:
+        ffn = moe_lib.moe_ffn_ep if cfg.moe.ep else moe_lib.moe_ffn
+        h2 = ffn(p["moe"], h2, cfg)
+    else:
+        h2 = layers.mlp(p["mlp"], h2, cfg)
+    x = x + h2
+    return constrain(x, "batch", "seq" if cfg.seq_shard else None, None), new_cache
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg,
+    *,
+    prefix_embeds: jax.Array | None = None,
+    cache: dict | None = None,
+    cache_index: jax.Array | None = None,
+    return_aux: bool = False,
+):
+    """tokens: (B, S) int32 -> logits (B, S[+P], vocab).
+
+    With ``cache`` (decode/prefill-into-cache): returns (logits, new_cache);
+    cache = {"k": (L, B, S_max, KV, hd), "v": ...}.
+    """
+    x = layers.embed(params["embed"], tokens)
+    if prefix_embeds is not None:  # vlm stub frontend
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    base = 0 if cache_index is None else cache_index
+    positions = base + jnp.arange(s)[None, :]
+    x = constrain(x, "batch", "seq" if cfg.seq_shard else None, None)
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        h, aux = carry
+        if cache is None:
+            blk = xs
+            if cfg.moe.n_experts:
+                aux = aux + moe_lib.load_balance_loss(
+                    blk["moe"], layers.rmsnorm(blk["ln2"], h, cfg.norm_eps), cfg
+                )
+            h, _ = _block(blk, h, cfg, positions=positions)
+            return (h, aux), None
+        blk, ck, cv = xs
+        h, new_kv = _block(
+            blk, h, cfg, positions=positions, cache=(ck, cv), cache_index=base
+        )
+        return (h, aux), new_kv
+
+    block_fn = body
+    if cfg.remat == "full" and cache is None:
+        block_fn = jax.checkpoint(body, prevent_cse=False)
+
+    if cache is None:
+        (x, aux), _ = jax.lax.scan(block_fn, (x, aux0), params["blocks"], unroll=cfg.scan_unroll)
+        new_cache = None
+    else:
+        (x, aux), kv = jax.lax.scan(
+            block_fn, (x, aux0), (params["blocks"], cache["k"], cache["v"]),
+            unroll=cfg.scan_unroll,
+        )
+        new_cache = {"k": kv[0], "v": kv[1]}
+
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["head"], x, cfg.quant)
+    logits = constrain(logits, "batch", None, "vocab")
+    if cache is not None:
+        return logits, new_cache
+    if return_aux:
+        return logits, aux
+    return logits
+
+
+# --------------------------------------------------------------------- loss
+
+
+def loss_fn(params, batch, cfg):
+    """Next-token cross-entropy; batch = {"tokens": (B, S+1)} (+ optional
+    "patches" for vlm).  Returns (loss, metrics)."""
+    tokens = batch["tokens"][:, :-1]
+    targets = batch["tokens"][:, 1:]
+    prefix = batch.get("patches")
+    logits, aux = forward(params, tokens, cfg, prefix_embeds=prefix, return_aux=True)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1] :, :]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ------------------------------------------------------------------- decode
+
+
+def init_cache(cfg, batch: int, max_seq: int, *, dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg):
+    """Logical axes of the KV cache (for sharding: batch over data, kv-heads
+    over model when divisible, else head_dim)."""
+    return (None, "batch", None, "kv_heads", "kv_head_dim")
+
+
+def decode_step(params, tokens, cache, cache_index, cfg, *, prefix_embeds=None):
+    """One serving step: tokens (B, S_new) appended at cache_index.
+
+    prefill: S_new = prompt length; decode: S_new = 1.
+    Returns (logits for the new positions, updated cache).
+    """
+    logits, new_cache = forward(
+        params, tokens, cfg, prefix_embeds=prefix_embeds,
+        cache=cache, cache_index=cache_index,
+    )
+    return logits, new_cache

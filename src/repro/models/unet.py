@@ -1,0 +1,146 @@
+"""U-Net (the paper's target application) with MMA-quantized 3x3 convs.
+
+Faithful to the paper's deployment: the network is trained in float (or
+QAT), quantized FBGEMM-style to int8, and its 3x3 convolutions execute on
+the MSDF merged multiply-add datapath (``core.mma`` / ``kernels.mma_conv2d``
+— the KPB maps the k*k taps into the contraction dim).  2x2 pool/upsample
+and the final 1x1 conv run off the accelerator, as in the paper (Sec. 3.1).
+
+The default geometry is the Table-1-calibrated config
+(``core.cycle_model.CALIBRATED_UNET``): 80x80x4 input, base 48, depth 3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mma
+from repro.core.cycle_model import CALIBRATED_UNET, ConvLayerSpec, unet_conv_layers
+
+
+@dataclass(frozen=True)
+class UNetConfig:
+    hw: int = CALIBRATED_UNET["hw"]
+    in_ch: int = CALIBRATED_UNET["in_ch"]
+    base: int = CALIBRATED_UNET["base"]
+    depth: int = CALIBRATED_UNET["depth"]
+    convs_per_stage: int = CALIBRATED_UNET["convs_per_stage"]
+    n_classes: int = 4
+    quant_mode: str = "none"  # 'none' | 'mma_int8'
+    planes: int = 8
+    impl: str = "xla"  # mma impl: xla | pallas | cascade | int8
+    family: str = "unet"
+
+    def conv_layers(self) -> list[ConvLayerSpec]:
+        return unet_conv_layers(self.hw, self.in_ch, self.base, self.depth,
+                                self.convs_per_stage)
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    std = 1.0 / jnp.sqrt(kh * kw * cin)
+    return {
+        "w": (jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout), jnp.float32) * std),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def init_params(key, cfg: UNetConfig) -> dict:
+    keys = iter(jax.random.split(key, 64))
+    p: dict = {"enc": [], "dec": []}
+    ch = cfg.in_ch
+    enc_ch = []
+    for d in range(cfg.depth):
+        c = cfg.base * (2**d)
+        stage = [_conv_init(next(keys), 3, 3, ch, c)]
+        for _ in range(cfg.convs_per_stage - 1):
+            stage.append(_conv_init(next(keys), 3, 3, c, c))
+        p["enc"].append(stage)
+        enc_ch.append(c)
+        ch = c
+    c = cfg.base * (2**cfg.depth)
+    p["bottleneck"] = [_conv_init(next(keys), 3, 3, ch, c)]
+    for _ in range(cfg.convs_per_stage - 1):
+        p["bottleneck"].append(_conv_init(next(keys), 3, 3, c, c))
+    ch = c
+    for d in reversed(range(cfg.depth)):
+        c = enc_ch[d]
+        stage = [_conv_init(next(keys), 3, 3, c + ch, c)]
+        for _ in range(cfg.convs_per_stage - 1):
+            stage.append(_conv_init(next(keys), 3, 3, c, c))
+        p["dec"].append(stage)
+        ch = c
+    p["head"] = _conv_init(next(keys), 1, 1, ch, cfg.n_classes)
+    return p
+
+
+def conv3x3(p, x, cfg: UNetConfig):
+    """3x3 conv through the selected datapath (float or MMA int8)."""
+    if cfg.quant_mode == "mma_int8":
+        from repro.core import quant
+        from repro.kernels import ops
+
+        xq = quant.quantize_acts(x)
+        wq = quant.quantize_weights(p["w"], channel_axis=-1)
+        if cfg.impl == "pallas":
+            out = ops.mma_conv2d(xq.values, wq.values, planes=cfg.planes)
+        else:
+            # im2col + the selected matmul path (xla horner / cascade / int8)
+            kh, kw, cin, cout = p["w"].shape
+            xp = jnp.pad(xq.values, ((0, 0), (1, 1), (1, 1), (0, 0)))
+            n, h, w_, _ = x.shape
+            patches = jnp.concatenate(
+                [xp[:, i : i + h, j : j + w_, :] for i in range(kh) for j in range(kw)],
+                axis=-1,
+            )
+            out = mma.mma_dot(
+                patches.reshape(-1, kh * kw * cin),
+                wq.values.reshape(kh * kw * cin, cout),
+                planes=cfg.planes,
+                impl=cfg.impl,
+            ).reshape(n, h, w_, cout)
+        out = out.astype(jnp.float32) * quant.quantized_matmul_scale(xq.scale, wq.scale)
+    else:
+        out = jax.lax.conv_general_dilated(
+            x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+    return out + p["b"]
+
+
+def forward(params, x, cfg: UNetConfig):
+    """x: (N, H, W, Cin) -> logits (N, H, W, n_classes)."""
+    skips = []
+    h = x
+    for stage in params["enc"]:
+        for conv in stage:
+            h = jax.nn.relu(conv3x3(conv, h, cfg))
+        skips.append(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    for conv in params["bottleneck"]:
+        h = jax.nn.relu(conv3x3(conv, h, cfg))
+    for d, stage in enumerate(params["dec"]):
+        # 2x nearest upsample (off-accelerator op, like the paper's 2x2 path)
+        n, hh, ww, c = h.shape
+        h = jnp.broadcast_to(h[:, :, None, :, None, :], (n, hh, 2, ww, 2, c)).reshape(
+            n, hh * 2, ww * 2, c
+        )
+        h = jnp.concatenate([skips[-(d + 1)], h], axis=-1)
+        for conv in stage:
+            h = jax.nn.relu(conv3x3(conv, h, cfg))
+    out = jax.lax.conv_general_dilated(
+        h, params["head"]["w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + params["head"]["b"]
+
+
+def loss_fn(params, batch, cfg: UNetConfig):
+    """Segmentation cross-entropy; batch = {"image": (N,H,W,C), "mask": (N,H,W)}."""
+    logits = forward(params, batch["image"], cfg).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["mask"][..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll}

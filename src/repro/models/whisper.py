@@ -1,0 +1,213 @@
+"""Whisper (enc-dec audio) — transformer backbone only, per the assignment:
+the conv/mel frontend is a STUB (``input_specs`` provides precomputed frame
+embeddings).  32 encoder + 32 decoder layers, learned positions, GELU MLPs.
+
+Shape convention (DESIGN.md): the assigned seq shapes apply to the *decoder*
+token stream; the encoder memory is the stub's ``enc_seq`` frames.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from . import layers
+
+
+def init_cross_attention(key, cfg) -> dict:
+    return layers.init_attention(key, cfg)
+
+
+def init_enc_block(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_norm(cfg.d_model),
+        "attn": layers.init_attention(k1, cfg),
+        "ln2": layers.init_norm(cfg.d_model),
+        "mlp": layers.init_mlp(k2, cfg),
+    }
+
+
+def init_dec_block(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_norm(cfg.d_model),
+        "self_attn": layers.init_attention(k1, cfg),
+        "ln_x": layers.init_norm(cfg.d_model),
+        "cross_attn": init_cross_attention(k2, cfg),
+        "ln2": layers.init_norm(cfg.d_model),
+        "mlp": layers.init_mlp(k3, cfg),
+    }
+
+
+def init_params(key, cfg, *, max_dec_pos: int = 4096) -> dict:
+    ke, kd, kpe, kpd, kemb = jax.random.split(key, 5)
+    ekeys = jax.random.split(ke, cfg.enc_layers or cfg.n_layers)
+    dkeys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "enc_pos": (jax.random.normal(kpe, (cfg.enc_seq, cfg.d_model), jnp.float32)
+                    * 0.01).astype(jnp.bfloat16),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(ekeys),
+        "enc_ln": layers.init_norm(cfg.d_model),
+        "embed": layers.init_embedding(kemb, cfg.vocab, cfg.d_model),
+        "dec_pos": (jax.random.normal(kpd, (max_dec_pos, cfg.d_model), jnp.float32)
+                    * 0.01).astype(jnp.bfloat16),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(dkeys),
+        "dec_ln": layers.init_norm(cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames: (B, T_enc, D) stub embeddings -> encoder memory (B, T_enc, D)."""
+    x = frames.astype(jnp.bfloat16) + params["enc_pos"][None, : frames.shape[1]]
+    x = constrain(x, "batch", "seq" if cfg.seq_shard else None, None)
+
+    def body(h, blk):
+        a, _ = layers.attention(
+            blk["attn"], layers.rmsnorm(blk["ln1"], h, cfg.norm_eps), cfg,
+            positions=None, causal=False,
+        )
+        h = h + a
+        h = h + layers.mlp(blk["mlp"], layers.rmsnorm(blk["ln2"], h, cfg.norm_eps), cfg)
+        return constrain(h, "batch", "seq" if cfg.seq_shard else None, None), None
+
+    fn = body
+    if cfg.remat == "full":
+        fn = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"], unroll=cfg.scan_unroll)
+    return layers.rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def _cross_attend(p, x, memory, cfg, *, cross_kv=None):
+    """Cross attention: queries from decoder x, keys/values from memory.
+
+    ``cross_kv`` = (k, v) precomputed once per request (decode fast path —
+    re-projecting the encoder memory every token costs 2*T_enc*d^2 FLOPs
+    per layer per step; see EXPERIMENTS.md §Perf whisper-decode note).
+    """
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = layers.linear(p["wq"], x, cfg.quant).reshape(b, s, cfg.n_heads, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+    else:
+        k = layers.linear(p["wk"], memory, cfg.quant).reshape(
+            b, memory.shape[1], cfg.n_kv_heads, hd
+        )
+        v = layers.linear(p["wv"], memory, cfg.quant).reshape(
+            b, memory.shape[1], cfg.n_kv_heads, hd
+        )
+    q, k, v = layers.constrain_qkv(q, k, v, cfg, s)
+    out = layers.flash_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return layers.linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd), cfg.quant)
+
+
+def precompute_cross_kv(params, memory, cfg):
+    """Project the encoder memory through every decoder layer's cross-attn
+    k/v once per request: returns {"k","v"}: (L, B, T_enc, KV, hd)."""
+    b, t, _ = memory.shape
+    hd = cfg.hd
+
+    def one(_, blk):
+        p = blk["cross_attn"]
+        k = layers.linear(p["wk"], memory, cfg.quant).reshape(b, t, cfg.n_kv_heads, hd)
+        v = layers.linear(p["wv"], memory, cfg.quant).reshape(b, t, cfg.n_kv_heads, hd)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(one, None, params["dec_blocks"],
+                               unroll=cfg.scan_unroll)
+    return {"k": ks, "v": vs}
+
+
+def decode(params, tokens, memory, cfg, *, cache=None, cache_index=None,
+           cross_kv=None):
+    x = layers.embed(params["embed"], tokens)
+    base = 0 if cache_index is None else cache_index
+    # Whisper uses learned absolute decoder positions (not RoPE).
+    pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], base, x.shape[1], 0)
+    x = x + pos[None]
+    positions = None
+    x = constrain(x, "batch", "seq" if cfg.seq_shard else None, None)
+
+    def body(carry, xs):
+        h = carry
+        ckv = None
+        if cache is None:
+            blk = xs
+            a, _ = layers.attention(
+                blk["self_attn"], layers.rmsnorm(blk["ln1"], h, cfg.norm_eps), cfg,
+                positions=positions,
+            )
+            new_kv = None
+        else:
+            if cross_kv is not None:
+                blk, ck, cv, xk, xv = xs
+                ckv = (xk, xv)
+            else:
+                blk, ck, cv = xs
+            a, new_kv = layers.attention(
+                blk["self_attn"], layers.rmsnorm(blk["ln1"], h, cfg.norm_eps), cfg,
+                positions=positions, cache=(ck, cv), cache_index=base,
+            )
+        h = h + a
+        h = h + _cross_attend(
+            blk["cross_attn"], layers.rmsnorm(blk["ln_x"], h, cfg.norm_eps), memory,
+            cfg, cross_kv=ckv,
+        )
+        h = h + layers.mlp(blk["mlp"], layers.rmsnorm(blk["ln2"], h, cfg.norm_eps), cfg)
+        h = constrain(h, "batch", "seq" if cfg.seq_shard else None, None)
+        return h, new_kv
+
+    fn = body
+    if cfg.remat == "full" and cache is None:
+        fn = jax.checkpoint(body, prevent_cse=False)
+    if cache is None:
+        x, _ = jax.lax.scan(fn, x, params["dec_blocks"], unroll=cfg.scan_unroll)
+        new_cache = None
+    else:
+        xs_in = (params["dec_blocks"], cache["k"], cache["v"])
+        if cross_kv is not None:
+            xs_in = xs_in + (cross_kv["k"], cross_kv["v"])
+        x, kv = jax.lax.scan(fn, x, xs_in, unroll=cfg.scan_unroll)
+        new_cache = {"k": kv[0], "v": kv[1]}
+
+    x = layers.rmsnorm(params["dec_ln"], x, cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x)  # whisper ties output proj
+    logits = constrain(logits, "batch", None, "vocab")
+    return (logits, new_cache) if cache is not None else logits
+
+
+def forward(params, batch_or_tokens, cfg, **kw):
+    """Training forward: batch = {"frames": (B,T,D), "tokens": (B,S)}."""
+    if isinstance(batch_or_tokens, dict):
+        frames = batch_or_tokens["frames"]
+        tokens = batch_or_tokens["tokens"]
+    else:
+        raise ValueError("whisper.forward expects a batch dict")
+    memory = encode(params, frames, cfg)
+    return decode(params, tokens, memory, cfg)
+
+
+def loss_fn(params, batch, cfg):
+    tokens = batch["tokens"][:, :-1]
+    targets = batch["tokens"][:, 1:]
+    memory = encode(params, batch["frames"], cfg)
+    logits = decode(params, tokens, memory, cfg).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll}
+
+
+def init_cache(cfg, batch: int, max_seq: int, *, dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, tokens, cache, cache_index, cfg, *, memory=None,
+                cross_kv=None, **_):
+    """Serving step: memory (and optionally the per-layer cross K/V — see
+    ``precompute_cross_kv``) computed once at request admission."""
+    assert memory is not None
+    return decode(params, tokens, memory, cfg, cache=cache,
+                  cache_index=cache_index, cross_kv=cross_kv)

@@ -1,0 +1,181 @@
+"""Zamba2 — hybrid: Mamba2 backbone with a *shared* attention block.
+
+Zamba2 interleaves a single weight-shared attention+MLP block into the
+Mamba2 stack (applied every ``attn_every`` layers, with the original
+embedding concatenated to the block input).  We scan over groups of
+``attn_every`` mamba layers and apply the shared block between groups —
+one copy of attention weights, exactly the paper's parameter-sharing trick.
+
+81 assigned layers = 13 groups of 6 + 3 tail mamba layers (scanned
+separately); the shared block fires after each full group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from . import layers, mamba2, transformer
+
+
+def _group_split(cfg):
+    g = cfg.attn_every or 6
+    n_groups = cfg.n_layers // g
+    tail = cfg.n_layers - n_groups * g
+    return g, n_groups, tail
+
+
+def init_params(key, cfg) -> dict:
+    ke, km, ks, kt, kh = jax.random.split(key, 5)
+    g, n_groups, tail = _group_split(cfg)
+    mkeys = jax.random.split(km, n_groups * g).reshape(n_groups, g, 2)
+    grouped = jax.vmap(
+        jax.vmap(lambda k: {"ln": layers.init_norm(cfg.d_model),
+                            "mamba": mamba2.init_mamba_block(k, cfg)})
+    )(mkeys)
+    # Shared attention block input is [hidden ; embedding] (Zamba concat).
+    shared_cfg = cfg.replace(d_model=2 * cfg.d_model)
+    shared = {
+        "ln": layers.init_norm(2 * cfg.d_model),
+        "attn": layers.init_attention(ks, shared_cfg),
+        "proj": layers.init_linear(kt, 2 * cfg.d_model, cfg.d_model),
+    }
+    p = {
+        "embed": layers.init_embedding(ke, cfg.vocab, cfg.d_model),
+        "groups": grouped,
+        "shared": shared,
+        "ln_f": layers.init_norm(cfg.d_model),
+        "head": layers.init_linear(kh, cfg.d_model, cfg.vocab),
+    }
+    if tail:
+        tkeys = jax.random.split(kh, tail).reshape(tail, 2)
+        p["tail"] = jax.vmap(
+            lambda k: {"ln": layers.init_norm(cfg.d_model),
+                       "mamba": mamba2.init_mamba_block(k, cfg)}
+        )(tkeys)
+    return p
+
+
+def _shared_attn(p, x, emb, cfg, *, positions, cache=None, cache_index=None):
+    """The weight-shared attention block on [x ; emb] (2*d_model wide)."""
+    cat = jnp.concatenate([x, emb], axis=-1)
+    shared_cfg = cfg.replace(d_model=2 * cfg.d_model)
+    h, new_cache = layers.attention(
+        p["attn"], layers.rmsnorm(p["ln"], cat, cfg.norm_eps), shared_cfg,
+        positions=positions, cache=cache, cache_index=cache_index,
+    )
+    return x + layers.linear(p["proj"], h, cfg.quant), new_cache
+
+
+def forward(params, tokens, cfg, *, state=None, cache_index=None, **_):
+    """state (decode): {"mamba": stacked group states, "tail": ...,
+    "attn_k"/"attn_v": (G, B, S_max, KV, hd), "emb": None}."""
+    g, n_groups, tail = _group_split(cfg)
+    emb = layers.embed(params["embed"], tokens)
+    x = constrain(emb, "batch", "seq" if cfg.seq_shard else None, None)
+    base = 0 if cache_index is None else cache_index
+    positions = base + jnp.arange(x.shape[1])[None, :]
+
+    def mamba_group(h, gp, gstate):
+        """Scan over the g mamba layers inside one group."""
+
+        def inner(c, xs):
+            hh = c
+            if gstate is None:
+                blk = xs
+                out, _ = mamba2.mamba_forward(
+                    blk["mamba"], layers.rmsnorm(blk["ln"], hh, cfg.norm_eps), cfg
+                )
+                return hh + out, None
+            blk, conv_s, ssm_s = xs
+            out, new_s = mamba2.mamba_forward(
+                blk["mamba"], layers.rmsnorm(blk["ln"], hh, cfg.norm_eps), cfg,
+                state={"conv": conv_s, "ssm": ssm_s},
+            )
+            return hh + out, (new_s["conv"], new_s["ssm"])
+
+        fn = inner
+        if cfg.remat == "full" and gstate is None:
+            fn = jax.checkpoint(inner, prevent_cse=False)
+        if gstate is None:
+            h, _ = jax.lax.scan(fn, h, gp, unroll=cfg.scan_unroll)
+            return h, None
+        h, new = jax.lax.scan(fn, h, (gp, gstate["conv"], gstate["ssm"]),
+                              unroll=cfg.scan_unroll)
+        return h, {"conv": new[0], "ssm": new[1]}
+
+    # Groups are iterated in Python (13 iterations — the shared attention
+    # block between groups has *one* weight copy, so it cannot live in the
+    # same scan as the stacked mamba params).
+    new_state = {"groups": [], "attn": []} if state is not None else None
+    for gi in range(n_groups):
+        gp = jax.tree.map(lambda a, gi=gi: a[gi], params["groups"])
+        gstate = None if state is None else jax.tree.map(
+            lambda a, gi=gi: a[gi], state["groups"]
+        )
+        x, gnew = mamba_group(x, gp, gstate)
+        if state is None:
+            x, _ = _shared_attn(params["shared"], x, emb, cfg, positions=positions)
+        else:
+            ck = state["attn_k"][gi]
+            cv = state["attn_v"][gi]
+            x, (nk, nv) = _shared_attn(
+                params["shared"], x, emb, cfg, positions=positions,
+                cache=(ck, cv), cache_index=base,
+            )
+            new_state["attn"].append((nk, nv))
+            new_state["groups"].append(gnew)
+
+    if tail:
+        tstate = None if state is None else state["tail"]
+        x, tnew = mamba_group(x, params["tail"], tstate)
+        if state is not None:
+            new_state["tail"] = tnew
+
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = layers.linear(params["head"], x, cfg.quant)
+    logits = constrain(logits, "batch", None, "vocab")
+    if state is None:
+        return logits
+    out_state = {
+        "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *new_state["groups"]),
+        "attn_k": jnp.stack([kv[0] for kv in new_state["attn"]]),
+        "attn_v": jnp.stack([kv[1] for kv in new_state["attn"]]),
+    }
+    if tail:
+        out_state["tail"] = new_state["tail"]
+    return logits, out_state
+
+
+def init_state(cfg, batch: int, max_seq: int) -> dict:
+    g, n_groups, tail = _group_split(cfg)
+    one = mamba2.init_state(cfg, batch)
+    groups = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_groups, g) + a.shape), one
+    )
+    # The shared block attends over [x ; emb] (2*d_model wide), so its head
+    # dim doubles relative to cfg.hd.
+    shared_hd = 2 * cfg.d_model // cfg.n_heads
+    kv_shape = (n_groups, batch, max_seq, cfg.n_kv_heads, shared_hd)
+    st = {
+        "groups": groups,
+        "attn_k": jnp.zeros(kv_shape, jnp.bfloat16),
+        "attn_v": jnp.zeros(kv_shape, jnp.bfloat16),
+    }
+    if tail:
+        st["tail"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (tail,) + a.shape), one)
+    return st
+
+
+def loss_fn(params, batch, cfg):
+    tokens = batch["tokens"][:, :-1]
+    targets = batch["tokens"][:, 1:]
+    logits = forward(params, tokens, cfg).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll}
+
+
+def decode_step(params, tokens, state, cache_index, cfg, **_):
+    return forward(params, tokens, cfg, state=state, cache_index=cache_index)

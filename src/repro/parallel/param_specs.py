@@ -1,0 +1,102 @@
+"""Derive per-parameter PartitionSpecs (TP/EP layout) for any model family.
+
+Strategy: shape-based defaults + path-name overrides, applied to the
+*abstract* param tree (eval_shape), so the dry-run never allocates.
+
+Defaults (2-D weights, after skipping the stacked-layer leading dim):
+  (vocab, d)    -> ('vocab', None)      sharded embedding
+  (d, vocab)    -> (None, 'vocab')      sharded LM head
+  (d_in, d_out) -> (None, 'model')      column-parallel (Megatron "f")
+  row-parallel overrides by name: wo / w_down / out_proj / proj / wv(cm)
+                -> ('model', None)      contract the sharded dim -> psum
+  3-D (E, ., .) MoE expert stacks -> ('experts', None/'model' per shape)
+  1-D / norms / small -> replicated
+
+Divisibility is re-checked against the mesh at use time (sharding.spec_for).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from . import sharding as shd
+
+ROW_PARALLEL_NAMES = ("wo", "w_down", "out_proj", "proj", "wv_cm")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def logical_for_leaf(path: str, shape: tuple[int, ...], cfg) -> tuple:
+    """Logical axis names for one param leaf (full shape incl. stacked L)."""
+    names: list[str | None] = [None] * len(shape)
+    # Stacked-layer leading dims: blocks/* leaves carry (L, ...) (zamba2
+    # groups carry (G, g, ...)).  Detect by path prefix.
+    skip = 0
+    if any(seg in path for seg in ("blocks/", "groups/", "tail/", "enc_blocks/", "dec_blocks/")):
+        skip = 1
+        if "groups/" in path:
+            skip = 2
+    core = shape[skip:]
+    v = cfg.vocab if hasattr(cfg, "vocab") else -1
+
+    is_row = any(path.endswith(f"{n}/w") or path.endswith(f"{n}/w_q")
+                 for n in ROW_PARALLEL_NAMES)
+    # rwkv channel-mix 'wv' is (d_ff, d) row-parallel (unlike attention wv)
+    is_row = is_row or path.endswith("channel_mix/wv/w") \
+        or path.endswith("channel_mix/wv/w_q")
+
+    if len(core) == 2:
+        r, c = core
+        if r == v:
+            names[skip], names[skip + 1] = "vocab", None
+        elif c == v:
+            names[skip], names[skip + 1] = None, "vocab"
+        elif is_row:
+            names[skip], names[skip + 1] = "ffn", None
+        else:
+            names[skip], names[skip + 1] = None, "ffn"
+    elif len(core) == 3 and ("moe/" in path or "experts" in path):
+        # (E, d, f) / (E, f, d): experts over 'model'
+        names[skip] = "experts"
+    # conv / norm / 1-D leaves stay replicated
+    return tuple(names)
+
+
+def param_specs(abstract_params, cfg):
+    """PartitionSpec pytree matching the abstract param tree."""
+
+    def one(path, leaf):
+        return P(*logical_for_leaf(_path_str(path), leaf.shape, cfg))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def param_logical(abstract_params, cfg):
+    """Logical-name-tuple pytree (resolved lazily under a mesh)."""
+
+    def one(path, leaf):
+        return logical_for_leaf(_path_str(path), leaf.shape, cfg)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def named_shardings(abstract_params, cfg, mesh, rules=None):
+    """NamedSharding pytree (divisibility-guarded) for jit in_shardings."""
+    if rules is None:
+        rules = shd.RULE_SETS.get(getattr(cfg, "shard_rules", "default"),
+                                  shd.DEFAULT_RULES)
+
+    def one(path, leaf):
+        logical = logical_for_leaf(_path_str(path), leaf.shape, cfg)
+        with shd.use_mesh(mesh, rules):
+            return shd.named_sharding(*logical, shape=leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)

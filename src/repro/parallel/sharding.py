@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP, plus the pod axis).
+
+Models annotate tensors with *logical* axis names; this module maps them to
+mesh axes and applies ``with_sharding_constraint``.  The mapping is a rule
+list (MaxText-style) so perf iterations can re-shard without touching model
+code — several §Perf hillclimb steps are pure rule edits.
+
+Key rules (production mesh ("pod", "data", "model")):
+  batch        -> ("pod", "data")   pure DP across pods and the data axis
+  seq          -> "model"           Megatron-style sequence parallelism for
+                                    the residual stream (activations between
+                                    blocks are seq-sharded; attention/MLP
+                                    internals re-shard to heads/ffn, GSPMD
+                                    inserts the boundary all-to-alls)
+  heads/kv_heads/q_heads -> "model" tensor parallelism inside attention
+  ffn / experts -> "model"          TP for MLPs, EP for MoE experts
+  vocab        -> "model"           sharded embedding + logits
+
+Divisibility guard: a dim whose size does not divide the mapped axis size is
+left unsharded (e.g. kv_heads=4 on a 16-way model axis falls back to
+replicated; callers can instead shard head_dim).  This keeps one rule set
+valid across all 10 assigned architectures.
+
+The active mesh is carried in a contextvar (set by ``use_mesh``) so model
+code works unchanged in smoke tests (no mesh, constraints become no-ops) and
+in the dry-run/trainer (mesh set).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar("mesh", default=None)
+_RULES: contextvars.ContextVar[dict | None] = contextvars.ContextVar("rules", default=None)
+
+# Default logical -> mesh-axis rules.  Values are a mesh axis name, a tuple of
+# axis names, or None (replicated).
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": "model",          # sequence parallelism on the residual stream
+    "act_embed": None,
+    "embed": None,
+    "heads": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "kv_seq": "model",  # decode: KV cache sharded along sequence
+    "head_dim": None,
+    "kv_head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_capacity": ("pod", "data"),  # EP: capacity dim carries the DP split
+    "conv_window": None,
+    "ssm_state": None,
+    "unsharded": None,
+}
+
+# DeepSpeed-MoE-style layout for expert models: the model axis carries ONLY
+# experts; batch parallelism spans every axis (non-expert layers run pure DP
+# with zero TP collectives; the MoE all-to-all is the only activation
+# collective).  §Perf iteration 1b.
+EP_DP_RULES: dict[str, object] = {
+    **DEFAULT_RULES,
+    "batch": ("pod", "data", "model"),
+    "seq": None,
+    "heads": None,
+    "q_heads": None,
+    "kv_heads": None,
+    "ffn": None,
+    "vocab": None,
+    "experts": "model",
+    "expert_capacity": ("pod", "data"),
+}
+
+RULE_SETS = {"default": DEFAULT_RULES, "ep_dp": EP_DP_RULES}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: dict | None = None):
+    t1 = _MESH.set(mesh)
+    t2 = _RULES.set({**DEFAULT_RULES, **(rules or {})})
+    try:
+        yield
+    finally:
+        _MESH.reset(t1)
+        _RULES.reset(t2)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+def active_rules() -> dict:
+    return _RULES.get() or DEFAULT_RULES
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for(logical: Sequence[str | None], shape: Sequence[int] | None = None) -> P:
+    """Resolve logical names to a PartitionSpec under the active mesh/rules,
+    dropping any mapping that fails divisibility (when ``shape`` given) or
+    whose axis is absent from the mesh."""
+    mesh = current_mesh()
+    rules = active_rules()
+    entries = []
+    used: set[str] = set()
+    for i, name in enumerate(logical):
+        axes = rules.get(name) if name else None
+        if axes is None or mesh is None:
+            entries.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes:
+            entries.append(None)
+            continue
+        # longest PREFIX of the axis tuple that divides the dim (e.g. batch
+        # 32 on ('pod','data','model') falls back to ('pod','data')).
+        while axes and shape is not None and shape[i] % _axis_size(mesh, axes) != 0:
+            axes = axes[:-1]
+        if not axes:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes if len(axes) > 1 else axes[0])
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical: str | None, shape: Sequence[int] | None = None) -> NamedSharding:
+    mesh = current_mesh()
+    assert mesh is not None, "named_sharding requires an active mesh"
+    return NamedSharding(mesh, spec_for(logical, shape))
+
+
+def tree_specs(logical_tree, shape_tree) -> object:
+    """Map a pytree of logical-name tuples + matching ShapeDtypeStructs to
+    NamedShardings (used to build in_shardings for jit)."""
+    mesh = current_mesh()
+    assert mesh is not None
+
+    def one(names, sds):
+        return NamedSharding(mesh, spec_for(names, sds.shape))
+
+    return jax.tree.map(one, logical_tree, shape_tree, is_leaf=lambda t: isinstance(t, tuple))

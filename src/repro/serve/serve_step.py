@@ -1,0 +1,119 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token, cache of
+seq_len) for every family.  The decode step is what the assigned
+``decode_32k`` / ``long_500k`` cells lower: one new token against a KV cache
+(attention archs) or an O(1) recurrent state (ssm/hybrid archs).
+
+The MMA quantized datapath (cfg.quant.mode='mma_int8') applies here — this
+is where the paper's early-termination knob (quant.planes) meets LM serving.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.parallel import sharding as shd
+
+
+def make_prefill(cfg):
+    mod = models.build(cfg)
+
+    def prefill(params, tokens, extras):
+        if cfg.family in ("dense", "moe", "vlm"):
+            logits = mod.forward(
+                params, tokens, cfg, prefix_embeds=extras.get("patches")
+            )
+            return logits
+        if cfg.family == "encdec":
+            memory = mod.encode(params, extras["frames"], cfg)
+            return mod.decode(params, tokens, memory, cfg)
+        if cfg.family in ("hybrid", "ssm"):
+            return mod.forward(params, tokens, cfg)
+        raise ValueError(cfg.family)
+
+    return prefill
+
+
+def make_decode(cfg, batch: int, max_seq: int):
+    """Returns (decode_fn, abstract_cache).  decode_fn(params, tokens, cache,
+    index, extras) -> (logits, new_cache)."""
+    mod = models.build(cfg)
+
+    cache_dtype = jnp.int8 if cfg.quant.kv_int8 else jnp.bfloat16
+    if cfg.family in ("dense", "moe", "vlm"):
+        ab_cache = jax.eval_shape(
+            lambda: mod.init_cache(cfg, batch, max_seq, dtype=cache_dtype))
+
+        def decode(params, tokens, cache, index, extras):
+            return mod.decode_step(params, tokens, cache, index, cfg)
+
+    elif cfg.family == "encdec":
+        ab_cache = jax.eval_shape(
+            lambda: mod.init_cache(cfg, batch, max_seq, dtype=cache_dtype))
+
+        def decode(params, tokens, cache, index, extras):
+            return mod.decode_step(
+                params, tokens, cache, index, cfg, memory=extras["memory"],
+                cross_kv=extras.get("cross_kv"),
+            )
+
+    elif cfg.family == "hybrid":
+        ab_cache = jax.eval_shape(lambda: mod.init_state(cfg, batch, max_seq))
+
+        def decode(params, tokens, cache, index, extras):
+            return mod.decode_step(params, tokens, cache, index, cfg)
+
+    elif cfg.family == "ssm":
+        ab_cache = jax.eval_shape(lambda: mod.init_state(cfg, batch))
+
+        def decode(params, tokens, cache, index, extras):
+            return mod.decode_step(params, tokens, cache, index, cfg)
+
+    else:
+        raise ValueError(cfg.family)
+
+    return decode, ab_cache
+
+
+def cache_shardings(abstract_cache, cfg, mesh, batch: int, max_seq: int = 0):
+    """Shard caches.  Attention KV caches (identified by a ``max_seq``-sized
+    dim) shard batch over ('pod','data') and the *sequence* dim over 'model'
+    — decode attention then runs as partial-softmax per seq shard with an
+    O(B*H*d) psum, instead of all-gathering the cache (matches the 'kv_seq'
+    constraint in layers.attention).  Recurrent states (ssm/rwkv/conv) shard
+    batch over dp and their last |model|-divisible dim over 'model'."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dpa = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dpsize = 1
+    for a in dpa:
+        dpsize *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+
+    def one(sds):
+        shape = sds.shape
+        axes: list = [None] * len(shape)
+        bdim = -1
+        if batch > 1 and batch % dpsize == 0:
+            for i, d in enumerate(shape):
+                if d == batch:
+                    axes[i] = dpa if len(dpa) > 1 else dpa[0]
+                    bdim = i
+                    break
+        sdim = -1
+        if max_seq:
+            for i in range(bdim + 1, len(shape)):
+                if shape[i] == max_seq and shape[i] % msize == 0:
+                    axes[i] = "model"
+                    sdim = i
+                    break
+        if sdim < 0:
+            for i in range(len(shape) - 1, bdim, -1):
+                if axes[i] is None and shape[i] % msize == 0 and shape[i] >= msize:
+                    axes[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(one, abstract_cache)

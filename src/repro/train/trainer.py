@@ -1,0 +1,93 @@
+"""Training loop with the fault-tolerance/straggler machinery wired in.
+
+Responsibilities beyond calling train_step:
+  * checkpoint/restart: resumes from the latest committed checkpoint; data
+    is step-indexed so restart is bit-deterministic (no iterator state).
+  * async checkpointing every ``ckpt_every`` steps (overlapped with compute).
+  * straggler/hang watchdog: each step must complete within
+    ``watchdog_factor`` x the trailing-median step time, else the step is
+    flagged (on a real cluster this triggers requeue/replace of the slow
+    host; here it logs — the detection logic is what we can test).
+  * elastic restart: ``resume(mesh)`` re-shards the restored state onto
+    whatever mesh the new incarnation has (see checkpoint/ckpt.py).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.data import pipeline as data_pipeline
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    watchdog_factor: float = 3.0
+    log_every: int = 10
+
+
+@dataclass
+class StepTimer:
+    history: list[float] = field(default_factory=list)
+    flagged: list[int] = field(default_factory=list)
+
+    def record(self, step: int, dt: float, factor: float) -> bool:
+        """Returns True if this step is a straggler."""
+        is_straggler = False
+        if len(self.history) >= 5:
+            med = statistics.median(self.history[-20:])
+            if dt > factor * med:
+                self.flagged.append(step)
+                is_straggler = True
+        self.history.append(dt)
+        return is_straggler
+
+
+def train(
+    state,
+    step_fn,
+    data_cfg: data_pipeline.DataConfig,
+    tcfg: TrainerConfig,
+    *,
+    start_step: int = 0,
+    log=print,
+):
+    """Generic loop: state can be restored/elastic; returns (state, metrics)."""
+    ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep)
+    timer = StepTimer()
+    losses = []
+    step = start_step
+    while step < tcfg.total_steps:
+        batch = data_pipeline.get_batch(data_cfg, step)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if timer.record(step, dt, tcfg.watchdog_factor):
+            log(f"[straggler] step {step} took {dt:.3f}s (median "
+                f"{statistics.median(timer.history[-20:]):.3f}s) — would requeue host")
+        losses.append(float(metrics["loss"]))
+        if step % tcfg.log_every == 0:
+            log(f"step {step} loss {losses[-1]:.4f} ({dt*1e3:.0f} ms)")
+        step += 1
+        if step % tcfg.ckpt_every == 0 or step == tcfg.total_steps:
+            ckpt.save_async(step, {"state": state})
+    ckpt.wait()
+    return state, {"losses": losses, "stragglers": timer.flagged}
+
+
+def resume(like_state, tcfg: TrainerConfig, shardings=None):
+    """Restore the latest checkpoint (None if fresh start)."""
+    ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep)
+    step = ckpt.latest_step()
+    if step is None:
+        return None, 0
+    restored, step = ckpt.restore({"state": like_state}, shardings=shardings)
+    return restored["state"], step

@@ -1,0 +1,193 @@
+"""Per-arch smoke tests (reduced same-family configs): one forward + one
+train step on CPU, asserting shapes and no NaNs; plus decode-vs-forward
+consistency for every family (the serving path must agree with the training
+forward on the same tokens)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import SHAPES, cells
+from repro.models import build
+from repro.optim import adamw
+from repro.train import train_step as ts
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, b=2, s=64):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s + 1)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, cfg.vlm_patches, cfg.d_model)), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.enc_seq, cfg.d_model)), jnp.bfloat16
+        )
+    return batch
+
+
+def _init(cfg):
+    mod = build(cfg)
+    if cfg.family == "encdec":
+        return mod, mod.init_params(KEY, cfg, max_dec_pos=512)
+    return mod, mod.init_params(KEY, cfg)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+        "yi_6b": (32, 4096, 32, 4, 11008, 64000),
+        "h2o_danube_3_4b": (24, 3840, 32, 8, 10240, 32000),
+        "granite_20b": (52, 6144, 48, 1, 24576, 49152),
+        "internvl2_76b": (80, 8192, 64, 8, 28672, 128256),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+        "rwkv6_3b": (32, 2560, 40, 40, 8960, 65536),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+            cfg.vocab) == spec
+    if arch == "olmoe_1b_7b":
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (64, 8)
+    if arch == "dbrx_132b":
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (16, 4)
+    if arch == "zamba2_7b":
+        assert cfg.ssm_state == 64
+    if arch == "h2o_danube_3_4b":
+        assert cfg.swa_window > 0
+    if arch == "rwkv6_3b":
+        assert cfg.family == "ssm"  # attention-free
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    s = 256 if cfg.family == "hybrid" else 64  # mamba chunk divisibility
+    mod, params = _init(cfg)
+    state = {"params": params, "opt": adamw.init(params)}
+    batch = _batch_for(cfg, b=2, s=s)
+    new_state, metrics = jax.jit(lambda st, b: ts.train_step(st, b, cfg))(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # master (f32) params actually changed (bf16 copies may round to equal at
+    # warmup-sized lr)
+    delta = jax.tree.leaves(
+        jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     new_state["opt"].master, state["opt"].master)
+    )
+    assert max(delta) > 0
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "olmoe_1b_7b", "whisper_large_v3",
+                                   "rwkv6_3b", "zamba2_7b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode logits must match the teacher-forced forward logits."""
+    cfg = get_smoke_config(arch)
+    if cfg.moe.n_experts:
+        # capacity-dropping legitimately differs between prefill-sized and
+        # decode-sized batches; compare the dispatch math dropless.
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    s = 8 if cfg.family != "hybrid" else 8
+    mod, params = _init(cfg)
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, s)), jnp.int32)
+
+    if cfg.family == "encdec":
+        frames = jnp.asarray(rng.standard_normal((2, cfg.enc_seq, cfg.d_model)),
+                             jnp.bfloat16)
+        memory = mod.encode(params, frames, cfg)
+        full = mod.decode(params, tokens, memory, cfg)
+        cache = mod.init_cache(cfg, 2, 32)
+        outs = []
+        for i in range(s):
+            lg, cache = mod.decode_step(params, tokens[:, i:i+1], cache, i, cfg,
+                                        memory=memory)
+            outs.append(lg[:, 0])
+    elif cfg.family in ("ssm",):
+        full = mod.forward(params, tokens, cfg)
+        state = mod.init_state(cfg, 2)
+        outs = []
+        for i in range(s):
+            lg, state = mod.decode_step(params, tokens[:, i:i+1], state, i, cfg)
+            outs.append(lg[:, 0])
+    elif cfg.family == "hybrid":
+        # training path needs chunk-divisible seq; compare on decode-only
+        state = mod.init_state(cfg, 2, 32)
+        outs = []
+        for i in range(s):
+            lg, state = mod.decode_step(params, tokens[:, i:i+1], state, i, cfg)
+            outs.append(lg[:, 0])
+        full = None
+    else:
+        full = mod.forward(params, tokens, cfg)
+        cache = mod.init_cache(cfg, 2, 32)
+        outs = []
+        for i in range(s):
+            lg, cache = mod.decode_step(params, tokens[:, i:i+1], cache, i, cfg)
+            outs.append(lg[:, 0])
+
+    dec = jnp.stack(outs, axis=1).astype(jnp.float32)
+    assert bool(jnp.all(jnp.isfinite(dec)))
+    if full is not None:
+        full = full.astype(jnp.float32)
+        # bf16 accumulation differences allowed; argmax must agree
+        agree = (jnp.argmax(full, -1) == jnp.argmax(dec, -1)).mean()
+        assert float(agree) > 0.9, float(agree)
+
+
+def test_hybrid_decode_matches_chunked_prefill():
+    """Mamba2 single-step recurrence must agree with the chunked SSD path."""
+    from repro.models import mamba2
+
+    cfg = get_smoke_config("zamba2_7b")
+    p = mamba2.init_mamba_block(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(2)
+    s = 256  # one chunk
+    x = jnp.asarray(rng.standard_normal((1, s, cfg.d_model)) * 0.1, jnp.float32)
+    full, _ = mamba2.mamba_forward(p, x.astype(jnp.bfloat16), cfg)
+    state = mamba2.init_state(cfg, 1)
+    outs = []
+    for i in range(s):
+        o, state = mamba2.mamba_forward(
+            p, x[:, i:i+1].astype(jnp.bfloat16), cfg, state=state
+        )
+        outs.append(o[:, 0])
+    dec = jnp.stack(outs, axis=1).astype(jnp.float32)
+    diff = jnp.max(jnp.abs(dec - full.astype(jnp.float32)))
+    scale = jnp.max(jnp.abs(full.astype(jnp.float32))) + 1e-6
+    assert float(diff / scale) < 0.05, float(diff / scale)
+
+
+def test_long_context_cells_assignment():
+    assert cells("zamba2_7b") == ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    assert cells("rwkv6_3b")[-1] == "long_500k"
+    assert cells("h2o_danube_3_4b")[-1] == "long_500k"
+    assert "long_500k" not in cells("yi_6b")
+    assert "long_500k" not in cells("dbrx_132b")
+
+
+def test_quantized_forward_close_to_float():
+    from repro.configs.base import QuantConfig
+
+    cfg = get_smoke_config("yi_6b")
+    mod, params = _init(cfg)
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+    f = mod.forward(params, tokens, cfg).astype(jnp.float32)
+    qcfg = cfg.replace(quant=QuantConfig(mode="mma_int8", planes=8, impl="xla"))
+    q = mod.forward(params, tokens, qcfg).astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(f - q)) / (jnp.max(jnp.abs(f)) + 1e-6))
+    assert rel < 0.35, rel  # int8 per-tensor dynamic quant across a 2-layer net
+    # progressive precision: fewer planes => larger error, still finite
+    q4 = mod.forward(
+        params, tokens, cfg.replace(quant=QuantConfig(mode="mma_int8", planes=4))
+    ).astype(jnp.float32)
+    assert bool(jnp.all(jnp.isfinite(q4)))

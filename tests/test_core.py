@@ -1,0 +1,143 @@
+"""Core library: bit-plane decomposition, quantization, early termination,
+the FPGA cycle model vs the paper's Table 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplane, early_term, quant
+from repro.core import cycle_model as cm
+
+
+# --------------------------------------------------------------- bit planes
+
+
+@given(st.lists(st.integers(-128, 127), min_size=1, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_decompose_recombine_roundtrip(vals):
+    x = jnp.asarray(vals, jnp.int8)
+    planes = bitplane.decompose(x)
+    assert planes.shape == (8, len(vals))
+    assert set(np.unique(np.asarray(planes))) <= {0, 1}
+    back = bitplane.recombine(planes)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x, np.int32))
+
+
+def test_bitplane_matmul_exact():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, (13, 57)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (57, 11)), jnp.int8)
+    want = x.astype(jnp.int32) @ w.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(bitplane.bitplane_matmul(x, w)), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(bitplane.bitplane_matmul_cascade(x, w)), np.asarray(want)
+    )
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_truncation_error_within_bound(planes):
+    rng = np.random.default_rng(planes)
+    x = jnp.asarray(rng.integers(-128, 128, (8, 96)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (96, 8)), jnp.int8)
+    exact = x.astype(jnp.int32) @ w.astype(jnp.int32)
+    approx = bitplane.bitplane_matmul(x, w, planes=planes, correction="midpoint")
+    bound = early_term.truncation_bound(w, planes, midpoint=True)
+    err = jnp.abs(exact - approx)
+    assert bool(jnp.all(err <= bound[None, :] + 1))
+
+
+def test_progressive_precision_monotone():
+    """MSDF property: error (worst-case bound) shrinks as planes increase."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.integers(-128, 128, (128, 16)), jnp.int8)
+    bounds = [float(jnp.max(early_term.truncation_bound(w, b))) for b in range(1, 9)]
+    assert all(b1 >= b2 for b1, b2 in zip(bounds, bounds[1:]))
+    assert bounds[-1] == 0.0
+
+
+def test_choose_planes():
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.integers(-128, 128, (256, 32)), jnp.int8)
+    assert early_term.choose_planes(w, 1.0) == 1
+    assert early_term.choose_planes(w, 0.0) == 8
+    b = early_term.choose_planes(w, 0.01)
+    assert 1 <= b <= 8
+
+
+# ------------------------------------------------------------ quantization
+
+
+def test_quant_roundtrip_accuracy():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    q = quant.quantize_weights(w)
+    err = jnp.max(jnp.abs(quant.dequantize(q) - w))
+    assert float(err) <= float(jnp.max(jnp.abs(w))) / 127.0 + 1e-6
+
+
+def test_fake_quant_gradient_passthrough():
+    w = jnp.linspace(-1, 1, 32)
+    g = jax.grad(lambda x: jnp.sum(quant.fake_quant(x) ** 2))(w)
+    # STE: gradient equals that of the quantized value wrt itself (2*q)
+    assert g.shape == w.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ------------------------------------------------------------- cycle model
+
+
+def test_relation2_constants():
+    assert cm.p_out() == 21  # 2*8 + log2(32)
+    assert cm.mma_tile_cycles() == 28  # 2 + 21 + 5
+    assert cm.cascaded_tile_cycles() == 34  # 3 + 2*5 + 21
+    # the merged unit's claim: strictly fewer cycles than cascaded
+    assert cm.mma_tile_cycles() < cm.cascaded_tile_cycles()
+
+
+def test_relation3_conv_count():
+    l = cm.ConvLayerSpec(h=16, w=16, cin=64, cout=32)
+    assert l.out_h == 16 and l.out_w == 16
+    assert l.n_conv() == 16 * 16 * 32  # T_M = 1
+
+
+def test_calibrated_unet_matches_table1():
+    layers = cm.unet_conv_layers(**cm.CALIBRATED_UNET)
+    tile = cm.pipelined_tile_cycles()
+    cyc = cm.model_cycles(layers, tile_cycles=tile)
+    t_ms = cyc / cm.FREQ_HZ * 1e3
+    gops = cm.model_ops(layers) / (t_ms * 1e-3) / 1e9
+    assert abs(t_ms - 53.25) / 53.25 < 0.02, t_ms
+    assert abs(gops - 52.95) / 52.95 < 0.02, gops
+
+
+def test_proposed_row_energy_consistency():
+    layers = cm.unet_conv_layers(**cm.CALIBRATED_UNET)
+    row = cm.proposed_row(layers)
+    # energy = power * time must hold by construction
+    assert abs(row.energy_mj - row.power_w * row.time_ms) < 1e-6
+
+
+def test_paper_table1_internal_consistency():
+    """energy ~= (GOPS/(GOPS/W)) * time holds for 5 of 6 printed rows.
+
+    Reproduction finding (EXPERIMENTS.md §Table1): the paper's MSDF row is
+    internally inconsistent — 21.05/3.01 = 6.99 W gives 936.7 mJ, the table
+    prints 1644.77 mJ (implying 12.28 W).  We assert the consistency of the
+    other rows and pin the known discrepancy so a silent change is caught.
+    """
+    for name, r in cm.PAPER_TABLE1.items():
+        power = r["gops"] / r["gops_w"]
+        energy = power * r["time_ms"]
+        if name == "msdf":
+            assert energy / r["e_mj"] == pytest.approx(0.569, abs=0.01)
+        else:
+            assert abs(energy - r["e_mj"]) / r["e_mj"] < 0.02, (name, energy)
+
+
+def test_merged_vs_cascaded_speedup():
+    layers = cm.unet_conv_layers(**cm.CALIBRATED_UNET)
+    merged = cm.model_cycles(layers)
+    casc = cm.model_cycles(layers, tile_cycles=cm.cascaded_tile_cycles())
+    assert casc / merged == pytest.approx(34 / 28, rel=1e-6)

@@ -1,0 +1,68 @@
+"""Early termination (MSDF progressive precision) — accuracy/arithmetic
+trade validated end-to-end, plus hypothesis property tests on the bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplane, early_term, mma
+from repro.kernels import ref
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 7))
+@settings(max_examples=40, deadline=None)
+def test_bound_holds_randomized(seed, planes):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (4, 64)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (64, 4)), jnp.int8)
+    exact = ref.mma_matmul_ref(x, w)
+    approx = ref.mma_matmul_ref(x, w, planes=planes, midpoint=True)
+    bound = early_term.truncation_bound(w, planes, midpoint=True)
+    assert bool(jnp.all(jnp.abs(exact - approx) <= bound[None, :] + 1))
+
+
+def test_error_decays_geometrically():
+    """Each extra plane should roughly halve the worst-case error."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(-128, 128, (256, 16)), jnp.int8)
+    bounds = [float(jnp.max(early_term.truncation_bound(w, b, midpoint=False)))
+              for b in range(1, 8)]
+    for a, b in zip(bounds, bounds[1:]):
+        assert b <= a / 2 + 1
+
+
+def test_planes_sweep_lm_error_monotone():
+    """On a small LM, logit error vs the 8-plane reference must shrink
+    monotonically as planes increase (progressive precision end-to-end).
+    (Top-1 agreement on an *untrained* random net is noise — the trained
+    accuracy trade is exercised in examples/train_unet.py instead.)"""
+    from repro.configs import get_smoke_config
+    from repro.configs.base import QuantConfig
+    from repro.models import build
+
+    cfg = get_smoke_config("yi_6b")
+    mod = build(cfg)
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (2, 24)),
+                         jnp.int32)
+    ref_logits = mod.forward(
+        params, tokens, cfg.replace(quant=QuantConfig(mode="mma_int8", planes=8))
+    ).astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(ref_logits))) + 1e-6
+    errs = []
+    for planes in (4, 5, 6, 7):
+        lo = mod.forward(
+            params, tokens,
+            cfg.replace(quant=QuantConfig(mode="mma_int8", planes=planes)),
+        ).astype(jnp.float32)
+        errs.append(float(jnp.max(jnp.abs(lo - ref_logits))) / scale)
+    assert errs == sorted(errs, reverse=True), errs
+    assert errs[-1] < 0.25, errs
+
+
+def test_choose_planes_monotone_in_target():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.integers(-128, 128, (512, 64)), jnp.int8)
+    picks = [early_term.choose_planes(w, t) for t in (0.3, 0.1, 0.03, 0.01, 0.0)]
+    assert picks == sorted(picks)

@@ -1,0 +1,86 @@
+"""Bit-exactness of the cycle-level MSDF reference model (the paper's
+arithmetic): MMA units, online adders, the full KPB — property-tested with
+hypothesis against plain integer dot products."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.msdf import (
+    DELTA_MMA,
+    MMAUnit,
+    OnlineSerializer,
+    kpb_inner_product,
+    sd_to_int,
+)
+
+
+@given(
+    st.lists(st.integers(0, 255), min_size=32, max_size=32),
+    st.lists(st.integers(-128, 127), min_size=32, max_size=32),
+)
+@settings(max_examples=150, deadline=None)
+def test_mma_unit_bit_exact(acts, weights):
+    a = np.array(acts, np.uint8)
+    w = np.array(weights, np.int64)
+    unit = MMAUnit(w, t_n=32)
+    val, cycles = unit.run(a)
+    assert val == int(np.dot(a.astype(np.int64), w))
+    # relation-2 latency structure: delta + p_out cycles for one inner product
+    assert cycles == DELTA_MMA + unit.p_out
+    # every digit is a valid SD digit
+    assert set(unit.ogf.digits) <= {-1, 0, 1}
+    # redundancy invariant: the residual stays representable by the digits
+    # not yet emitted (the SD digit set's +-1 correction capacity)
+    assert unit.ogf.max_abs_residual < 2 ** (unit.p_out + 1)
+
+
+@given(st.integers(1, 16), st.data())
+@settings(max_examples=50, deadline=None)
+def test_mma_unit_other_tn(tn_pow, data):
+    tn = max(2, tn_pow)
+    a = np.array(data.draw(st.lists(st.integers(0, 255), min_size=tn, max_size=tn)), np.uint8)
+    w = np.array(data.draw(st.lists(st.integers(-128, 127), min_size=tn, max_size=tn)), np.int64)
+    unit = MMAUnit(w, t_n=tn)
+    val, _ = unit.run(a)
+    assert val == int(np.dot(a.astype(np.int64), w))
+
+
+@given(
+    st.lists(st.integers(0, 255), min_size=9 * 8, max_size=9 * 8),
+    st.lists(st.integers(-128, 127), min_size=9 * 8, max_size=9 * 8),
+)
+@settings(max_examples=25, deadline=None)
+def test_kpb_bit_exact(acts, weights):
+    a = np.array(acts, np.uint8).reshape(9, 8)
+    w = np.array(weights, np.int64).reshape(9, 8)
+    val, cycles = kpb_inner_product(a, w)
+    assert val == int(np.sum(a.astype(np.int64) * w))
+    # the digit-level pipelined tree must beat sequential unit latencies
+    assert cycles < 9 * (DELTA_MMA + 2 * 8 + 4)
+
+
+def test_kpb_adversarial_extremes():
+    for a_v, w_v in [(255, 127), (255, -128), (0, -128), (128, 127)]:
+        a = np.full((9, 32), a_v, np.uint8)
+        w = np.full((9, 32), w_v, np.int64)
+        val, _ = kpb_inner_product(a, w)
+        assert val == int(np.sum(a.astype(np.int64) * w))
+
+
+def test_online_serializer_msdf_order():
+    """Digits must appear most-significant-first: prefix reconstructions
+    converge monotonically in max error bound."""
+    w = np.arange(-16, 16, dtype=np.int64)
+    a = np.arange(32, dtype=np.uint8) * 8
+    unit = MMAUnit(w, t_n=32)
+    val, _ = unit.run(a)
+    digits = unit.ogf.digits
+    msb = unit.p_out - 1
+    errs = []
+    for k in range(1, len(digits) + 1):
+        partial = sd_to_int(digits[:k], msb)
+        errs.append(abs(val - partial))
+    # prefix error bounded by remaining digit weights (progressive precision)
+    for k, e in enumerate(errs[:-1], start=1):
+        assert e < 2 ** (msb - k + 1)
+    assert errs[-1] == 0
