@@ -1,0 +1,74 @@
+"""Dynamic-precision frontier: schedule vs (GOPS/W, relative error).
+
+For a sweep of error targets, build the per-layer :class:`PlaneSchedule`
+from the calibrated U-Net's actual weights, then report both sides of the
+trade the schedule buys:
+
+  * analytic cost — relation-(2) cycles recomputed layer-by-layer under the
+    schedule (``cycle_model.schedule_cycles``), hence time, GOPS, GOPS/W
+    (constant accelerator power) and energy;
+  * measured accuracy — max relative error of the scheduled U-Net forward
+    against the full 8-plane datapath, plus the per-layer analytic bound the
+    schedule was chosen against.
+
+Output CSV rows: name,us_per_call,derived — us_per_call is the modeled
+inference time; derived carries the frontier columns.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cycle_model as cm
+
+# None = full precision (the Table-1 operating point); floats are
+# worst-case per-layer relative-error targets for PlaneSchedule.from_weights.
+TARGETS = (None, 0.05, 0.02, 0.01, 0.005, 0.001)
+
+
+def run(targets=TARGETS, *, hw: int | None = None) -> list[tuple[str, float, str]]:
+    from repro.models import unet as unet_mod
+
+    cfg = unet_mod.UNetConfig(quant_mode="mma_int8", impl="xla")
+    if hw is not None:
+        cfg = dataclasses.replace(cfg, hw=hw)
+    layers = cfg.conv_layers()
+    params = unet_mod.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.hw, cfg.hw, cfg.in_ch))
+
+    power = cm.PAPER_TABLE1["proposed"]["gops"] / cm.PAPER_TABLE1["proposed"]["gops_w"]
+    ops = cm.model_ops(layers)
+
+    rows = []
+    for tgt in targets:
+        if tgt is None:
+            sched = cfg.schedule()  # uniform 8
+            name = "precision/full-8"
+        else:
+            sched = unet_mod.schedule_from_params(params, tgt)
+            name = f"precision/target-{tgt:g}"
+        cyc = cm.schedule_cycles(layers, sched)
+        t_ms = cyc / cm.FREQ_HZ * 1e3
+        gops = ops / (t_ms * 1e-3) / 1e9
+        scfg = dataclasses.replace(cfg, plane_schedule=tuple(sched.planes))
+        out_s, out_f, adv = unet_mod.forward_with_error_bound(params, x, scfg)
+        emp = float(jnp.max(jnp.abs(out_s - out_f))
+                    / jnp.maximum(jnp.max(jnp.abs(out_f)), 1e-8))
+        rows.append((
+            name,
+            t_ms * 1e3,
+            f"planes={'/'.join(map(str, sched.planes))};"
+            f"kept={sched.arithmetic_fraction():.3f};"
+            f"gops={gops:.2f};gops_w={gops / power:.2f};"
+            f"e_mj={power * t_ms:.1f};"
+            f"layer_bound={sched.rel_err_bound():.4g};"
+            f"rel_err={emp:.4g}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

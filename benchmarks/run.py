@@ -1,6 +1,6 @@
 """Benchmark harness — one section per paper table/claim.
 
-    PYTHONPATH=src python -m benchmarks.run [--section table1|kernels|roofline|msdf]
+    PYTHONPATH=src python -m benchmarks.run [--section table1|kernels|roofline|msdf|precision]
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -60,6 +60,10 @@ def main() -> None:
         from benchmarks import roofline
 
         rows += roofline.run()
+    if args.section in ("all", "precision"):
+        from benchmarks import precision_sweep
+
+        rows += precision_sweep.run()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,9 +1,13 @@
 """Batched LM serving through the continuous-batching engine, with the MMA
-int8 datapath and MSDF-style progressive precision.
+int8 datapath and MSDF dynamic precision: either a uniform plane budget
+(--planes) or a per-layer schedule derived from the served weights at an
+error target (--target-rel-err, overrides --planes).
 
     PYTHONPATH=src python examples/serve_lm.py [--arch yi_6b] [--quant]
+        [--planes 6 | --target-rel-err 0.01]
 """
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -11,7 +15,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.configs.base import QuantConfig
 from repro.models import build
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, Request, lm_schedule_from_params
 
 
 def main():
@@ -19,7 +23,12 @@ def main():
     ap.add_argument("--arch", default="yi_6b")
     ap.add_argument("--quant", action="store_true")
     ap.add_argument("--planes", type=int, default=8)
+    ap.add_argument("--target-rel-err", type=float, default=None,
+                    help="build a per-layer PlaneSchedule from the weights")
     args = ap.parse_args()
+    if args.target_rel_err is not None and not args.quant:
+        ap.error("--target-rel-err requires --quant (schedules drive the "
+                 "mma_int8 datapath)")
 
     cfg = get_smoke_config(args.arch)
     if args.quant:
@@ -28,6 +37,13 @@ def main():
     params = (mod.init_params(jax.random.PRNGKey(0), cfg, max_dec_pos=128)
               if cfg.family == "encdec"
               else mod.init_params(jax.random.PRNGKey(0), cfg))
+
+    sched_desc = f"planes={args.planes}"
+    if args.quant and args.target_rel_err is not None:
+        sched = lm_schedule_from_params(params, cfg, args.target_rel_err)
+        cfg = cfg.replace(quant=dataclasses.replace(
+            cfg.quant, plane_schedule=tuple(sched.planes)))
+        sched_desc = sched.describe()
 
     eng = Engine(cfg, params, batch=4, max_seq=64)
     rng = np.random.default_rng(0)
@@ -41,7 +57,7 @@ def main():
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
     assert len(done) == len(reqs) and all(len(r.out) == 8 for r in done)
     print(f"served {len(done)} requests, quant={'mma_int8' if args.quant else 'none'}"
-          f" planes={args.planes}")
+          f" {sched_desc}")
 
 
 if __name__ == "__main__":

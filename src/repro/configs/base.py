@@ -18,7 +18,17 @@ class QuantConfig:
     int8 through the MMA datapath with MSDF-style plane truncation."""
 
     mode: str = "none"  # 'none' | 'mma_int8'
-    planes: int = 8  # MSB planes consumed (early termination knob)
+    planes: int = 8  # MSB planes consumed (global early-termination knob)
+    # Per-layer plane budgets (dynamic precision, MINT-style).  Consumed by
+    # the transformer families (dense/moe/vlm) — models.build rejects it
+    # elsewhere.  When set, it overrides ``planes`` for the scan-rolled
+    # block stack: entry l is layer l's budget (clamped to the last entry
+    # for deeper stacks) and rides the
+    # layer scan as data via the exact bit-mask truncation identity
+    # (core.bitplane.truncate_to_planes).  Non-block linears (the lm head)
+    # keep the global ``planes``.  Build with
+    # core.PlaneSchedule.from_weights / serve.engine.lm_schedule_from_params.
+    plane_schedule: tuple[int, ...] | None = None
     impl: str = "xla"  # 'xla' | 'pallas' | 'cascade' | 'int8'
     # Serving extensions (beyond-paper, §Perf iteration 3): store weights as
     # int8 (+per-channel scale) instead of quantizing bf16 on the fly, and

@@ -1,6 +1,7 @@
 """Core library: the paper's contribution (MSDF digit-serial merged
 multiply-add) as composable JAX modules.  See DESIGN.md for the FPGA -> TPU
 mapping."""
-from . import bitplane, cycle_model, early_term, mma, msdf, quant  # noqa: F401
+from . import bitplane, cycle_model, early_term, mma, msdf, plane_schedule, quant  # noqa: F401
 from .mma import mma_dot, mma_linear  # noqa: F401
+from .plane_schedule import PlaneSchedule  # noqa: F401
 from .quant import QTensor, quantize_acts, quantize_weights  # noqa: F401

@@ -62,6 +62,50 @@ def recombine(planes: jax.Array, *, signed: bool = True) -> jax.Array:
     return acc
 
 
+def truncate_to_planes(
+    x: jax.Array, planes: int | jax.Array, *, signed: bool = True
+) -> jax.Array:
+    """Data-side form of plane truncation: returns ``x'`` such that a plain
+    full-precision matmul ``x' @ w`` equals ``bitplane_matmul(x, w, planes)``.
+
+    Identity (see ``kernels/ref.py``): consuming only the ``b`` MSB planes of
+    ``u = x + 128`` and Horner-rescaling equals masking off the low ``8-b``
+    bits of ``u``.  Because the mask is computed with jnp shifts, ``planes``
+    may be a *traced* scalar — this is what lets a per-layer
+    :class:`~repro.core.plane_schedule.PlaneSchedule` ride a ``lax.scan``
+    over stacked layer params while every datapath (including the
+    bit-parallel int8 baseline) sees ordinary int8 operands.
+    """
+    u = x.astype(jnp.int32)
+    if signed:
+        u = u + SIGNED_OFFSET
+    dropped = N_BITS - jnp.asarray(planes, jnp.int32)
+    mask = ~(jnp.left_shift(jnp.int32(1), dropped) - 1)
+    u = u & mask
+    if signed:
+        return (u - SIGNED_OFFSET).astype(jnp.int8)
+    return u.astype(x.dtype)
+
+
+def normalize_planes(
+    x: jax.Array, planes: int | jax.Array, *, signed: bool = True
+) -> tuple[jax.Array, int]:
+    """Resolve a per-call plane budget to (operand, static planes).
+
+    Static Python ints are validated (1..N_BITS) and passed through — the
+    kernel paths specialize on them and genuinely skip plane iterations.
+    Traced scalars — one entry of a PlaneSchedule riding a ``lax.scan`` —
+    are folded into the *data* via :func:`truncate_to_planes`, after which
+    every datapath runs its full-precision path on the pre-truncated
+    operand: identical numerics, one fused matmul.
+    """
+    if isinstance(planes, int):
+        if not (1 <= planes <= N_BITS):
+            raise ValueError(f"planes {planes} outside 1..{N_BITS}")
+        return x, planes
+    return truncate_to_planes(x, planes, signed=signed), N_BITS
+
+
 def bitplane_matmul(
     x: jax.Array,
     w: jax.Array,

@@ -153,6 +153,53 @@ def model_ops(layers: list[ConvLayerSpec]) -> int:
     return sum(l.ops() for l in layers)
 
 
+# ---- dynamic precision (per-layer plane schedules) -------------------------
+#
+# Digit-serial cycles scale with digits consumed: a layer truncated to b MSB
+# planes streams b activation digits instead of n=8, so its output stream is
+# p_out(b) = 2b + ceil(log2 T_N) digits and relation (2) shrinks layer-by-
+# layer under a schedule.  Accelerator power is held at the paper's implied
+# constant (GOPS / (GOPS/W)); the energy win comes from finishing earlier —
+# a conservative model, since an idle AND-array also burns less dynamic
+# power per cycle.
+
+
+def schedule_tile_cycles(planes: int, *, mode: str = "pipelined") -> int:
+    """Per-output-tile cycles of one layer running at ``planes`` digits.
+
+    mode='as_printed': relation (2) verbatim with n := planes.
+    mode='pipelined': the 2n steady-state initiation interval (see
+    ``pipelined_tile_cycles``), again with n := planes.
+    """
+    if mode == "as_printed":
+        return mma_tile_cycles(n_bits=planes)
+    if mode == "pipelined":
+        return pipelined_tile_cycles(n_bits=planes)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _planes_for(schedule, i: int) -> int:
+    # duck-typed over PlaneSchedule / list / tuple; clamps like
+    # PlaneSchedule.planes_for so short schedules degrade gracefully
+    return int(schedule[min(i, len(schedule) - 1)])
+
+
+def schedule_layer_cycles(
+    layers: list[ConvLayerSpec], schedule, *, mode: str = "pipelined"
+) -> list[int]:
+    """Relation (2) per layer under a per-layer plane schedule."""
+    return [
+        l.cycles(tile_cycles=schedule_tile_cycles(_planes_for(schedule, i), mode=mode))
+        for i, l in enumerate(layers)
+    ]
+
+
+def schedule_cycles(
+    layers: list[ConvLayerSpec], schedule, *, mode: str = "pipelined"
+) -> int:
+    return sum(schedule_layer_cycles(layers, schedule, mode=mode))
+
+
 @dataclass
 class PlatformRow:
     """One column of Table 1.  Derived metrics follow the paper's
@@ -206,6 +253,25 @@ def proposed_row(layers: list[ConvLayerSpec]) -> PlatformRow:
     return PlatformRow(
         "proposed(model)", t_ms, power, model_ops(layers), freq_mhz=100, slices=int(slices)
     )
+
+
+def schedule_row(
+    layers: list[ConvLayerSpec],
+    schedule,
+    *,
+    mode: str = "pipelined",
+    name: str | None = None,
+) -> PlatformRow:
+    """Table-1-style row for the proposed design under a plane schedule:
+    time from per-layer relation (2), ops counted at full precision (the
+    schedule delivers the same outputs, just with fewer digits), power the
+    paper's implied constant — so GOPS and GOPS/W scale with the speedup."""
+    cyc = schedule_cycles(layers, schedule, mode=mode)
+    t_ms = cyc / FREQ_HZ * 1e3
+    power = PAPER_TABLE1["proposed"]["gops"] / PAPER_TABLE1["proposed"]["gops_w"]
+    if name is None:
+        name = f"proposed(sched-{'-'.join(str(_planes_for(schedule, i)) for i in range(len(layers)))})"
+    return PlatformRow(name, t_ms, power, model_ops(layers), freq_mhz=100)
 
 
 def cascaded_row(layers: list[ConvLayerSpec]) -> PlatformRow:

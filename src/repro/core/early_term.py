@@ -41,11 +41,20 @@ def output_scale_bound(w_int8: jax.Array) -> jax.Array:
     return 255 * jnp.sum(jnp.abs(w_int8.astype(jnp.int32)), axis=0)
 
 
-def choose_planes(w_int8: jax.Array, target_rel_err: float) -> int:
-    """Fewest planes such that worst-case relative error <= target."""
+def choose_planes(
+    w_int8: jax.Array, target_rel_err: float, *, midpoint: bool = True
+) -> int:
+    """Fewest planes such that worst-case relative error <= target.
+
+    ``midpoint=False`` bounds *uncorrected* truncation — what the deployed
+    datapaths (``bitplane_matmul`` with correction='none', the Pallas kernel,
+    ``truncate_to_planes``) actually apply; the midpoint bound is half-sized
+    and only valid when the consumer adds the expected-value correction.
+    """
     denom = jnp.maximum(output_scale_bound(w_int8).astype(jnp.float32), 1.0)
     for b in range(1, N_BITS + 1):
-        rel = jnp.max(truncation_bound(w_int8, b).astype(jnp.float32) / denom)
+        bound = truncation_bound(w_int8, b, midpoint=midpoint)
+        rel = jnp.max(bound.astype(jnp.float32) / denom)
         if float(rel) <= target_rel_err:
             return b
     return N_BITS

@@ -34,15 +34,25 @@ def mma_dot(
     x_int8: jax.Array,
     w_int8: jax.Array,
     *,
-    planes: int = bitplane.N_BITS,
+    planes: int | jax.Array = bitplane.N_BITS,
     impl: Impl = "xla",
     signed: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """(..., K) int8 @ (K, N) int8 -> (..., N) int32, via the MMA datapath."""
+    """(..., K) int8 @ (K, N) int8 -> (..., N) int32, via the MMA datapath.
+
+    ``planes`` is the per-call precision budget: a static int specializes the
+    serial datapaths to that many MSB planes; a traced scalar applies the
+    same truncation on the data side (schedule-in-scan form, see
+    ``bitplane.normalize_planes``).
+    """
+    x_int8, planes = bitplane.normalize_planes(x_int8, planes, signed=signed)
     if impl == "int8":
         if planes != bitplane.N_BITS:
-            raise ValueError("bit-parallel baseline has no plane truncation")
+            # bit-parallel hardware has no serial early exit, but the *value*
+            # of a truncated result is still computable: fold the truncation
+            # into the operand and run the full-width matmul.
+            x_int8 = bitplane.truncate_to_planes(x_int8, planes, signed=signed)
         return jax.lax.dot_general(
             x_int8,
             w_int8,
@@ -68,7 +78,7 @@ def mma_linear(
     x: jax.Array,
     w: jax.Array,
     *,
-    planes: int = bitplane.N_BITS,
+    planes: int | jax.Array = bitplane.N_BITS,
     impl: Impl = "xla",
     w_q: quant.QTensor | None = None,
 ) -> jax.Array:

@@ -1,0 +1,159 @@
+"""Per-layer dynamic-precision schedules — the MSDF knob as a policy object.
+
+The MSDF formulation exists so a consumer can stop after the most significant
+digits; MINT (Usman et al.) makes that *per-layer* choice the headline.  A
+:class:`PlaneSchedule` assigns each conv/linear layer its own plane budget
+``b_l`` (1..8 MSB activation planes), built one of three ways:
+
+  * ``PlaneSchedule.uniform(b, n_layers)``      — the old global knob
+  * ``PlaneSchedule.from_list([...])``          — explicit per-layer budgets
+  * ``PlaneSchedule.from_weights(ws, target)``  — fewest planes per layer such
+    that the analytic worst-case relative error (``early_term``) meets a
+    target: the layers with small ``sum|w|`` dynamic range get away with
+    fewer digits, exactly the per-layer precision-assignment of MINT.
+
+Schedules are consumed three ways downstream:
+
+  * statically (U-Net, Pallas kernels): each distinct ``b_l`` compiles a
+    specialized kernel variant that genuinely skips MXU iterations
+    (``kernels.mma_matmul``);
+  * dynamically (scan-rolled LMs): ``b_l`` rides the scan as data and the
+    truncation applies via the exact bit-mask identity
+    (``bitplane.truncate_to_planes``) — same numerics, one fused matmul;
+  * analytically (``cycle_model.schedule_cycles``): relation-(2) cycles,
+    GOPS and GOPS/W recomputed layer-by-layer under the schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import early_term
+from .bitplane import N_BITS
+
+
+def layer_rel_bound(w_int8: jax.Array, planes: int) -> float:
+    """Worst-case relative error of one layer truncated to ``planes`` MSB
+    planes: max over output channels of truncation_bound / output_scale.
+
+    Uses the *uncorrected* bound (midpoint=False): the datapaths a schedule
+    drives apply plain truncation with no midpoint correction, and the
+    half-sized midpoint bound would under-state their worst case by 2x.
+    """
+    denom = jnp.maximum(
+        early_term.output_scale_bound(w_int8).astype(jnp.float32), 1.0
+    )
+    num = early_term.truncation_bound(
+        w_int8, planes, midpoint=False
+    ).astype(jnp.float32)
+    return float(jnp.max(num / denom))
+
+
+@dataclass(frozen=True)
+class PlaneSchedule:
+    """Immutable per-layer plane budgets with the bound that justified them.
+
+    ``planes[l]`` is the number of MSB activation planes layer ``l`` consumes.
+    ``layer_bounds[l]`` (when built from weights) is the analytic worst-case
+    relative error of that layer at its budget; ``target_rel_err`` is the
+    target the budgets were chosen against.
+    """
+
+    planes: tuple[int, ...]
+    target_rel_err: float | None = None
+    layer_bounds: tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        if not self.planes:
+            raise ValueError("empty schedule")
+        for b in self.planes:
+            if not (1 <= int(b) <= N_BITS):
+                raise ValueError(f"plane count {b} outside 1..{N_BITS}")
+
+    # ------------------------------------------------------------ builders
+
+    @classmethod
+    def uniform(cls, planes: int, n_layers: int) -> "PlaneSchedule":
+        return cls(planes=(int(planes),) * n_layers)
+
+    @classmethod
+    def from_list(cls, planes: Sequence[int]) -> "PlaneSchedule":
+        return cls(planes=tuple(int(b) for b in planes))
+
+    @classmethod
+    def from_weights(
+        cls, weights_int8: Sequence[jax.Array], target_rel_err: float
+    ) -> "PlaneSchedule":
+        """Fewest planes per layer meeting ``target_rel_err`` (worst case).
+
+        ``weights_int8[l]`` is layer ``l``'s int8 weight reshaped to (K, N) —
+        for a conv, (kh*kw*cin, cout), matching how the KPB contracts it.
+        """
+        budgets, bounds = [], []
+        for w in weights_int8:
+            w2 = w.reshape(-1, w.shape[-1])
+            b = early_term.choose_planes(w2, target_rel_err, midpoint=False)
+            budgets.append(b)
+            bounds.append(layer_rel_bound(w2, b))
+        return cls(
+            planes=tuple(budgets),
+            target_rel_err=float(target_rel_err),
+            layer_bounds=tuple(bounds),
+        )
+
+    # ----------------------------------------------------------- accessors
+
+    def __len__(self) -> int:
+        return len(self.planes)
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(self.planes)
+
+    def __getitem__(self, i: int) -> int:
+        return self.planes[i]
+
+    def planes_for(self, layer_idx: int) -> int:
+        """Budget for layer ``layer_idx``; clamps to the last entry so a
+        schedule built for N layers degrades gracefully on a deeper stack."""
+        return self.planes[min(layer_idx, len(self.planes) - 1)]
+
+    def as_array(self) -> jax.Array:
+        """(L,) int32 — the form that rides a ``lax.scan`` over layers."""
+        return jnp.asarray(self.planes, jnp.int32)
+
+    # ------------------------------------------------------------- metrics
+
+    def arithmetic_fraction(self) -> float:
+        """Fraction of full-precision digit-serial work the schedule keeps
+        (MSDF arithmetic is linear in digits consumed)."""
+        return sum(self.planes) / (N_BITS * len(self.planes))
+
+    def rel_err_bound(self) -> float:
+        """Advertised end-to-end relative-error bound: first-order
+        composition (sum) of the per-layer worst-case bounds.  Conv + ReLU
+        stages are 1-Lipschitz in the relative metric to first order, so
+        per-layer perturbations add; the per-layer bounds themselves are
+        worst-case L1 bounds and extremely loose in practice."""
+        if self.layer_bounds is not None:
+            return float(sum(self.layer_bounds))
+        if self.target_rel_err is not None:
+            return self.target_rel_err * len(self.planes)
+        # explicit/uniform schedules: all-planes-dropped worst case per layer
+        return float(
+            sum((2.0 ** (N_BITS - b) - 1.0) / 255.0 for b in self.planes)
+        )
+
+    def describe(self) -> str:
+        frac = self.arithmetic_fraction()
+        tgt = (
+            f", target={self.target_rel_err:g}"
+            if self.target_rel_err is not None
+            else ""
+        )
+        return (
+            f"PlaneSchedule({list(self.planes)}, kept={frac:.2f} of digit "
+            f"work{tgt})"
+        )

@@ -102,24 +102,17 @@ def _compiler_params():
         )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("planes", "signed", "interpret", "bm", "bk", "bn")
-)
-def mma_matmul_pallas(
+def _mma_matmul_impl(
     x: jax.Array,
     w: jax.Array,
     *,
-    planes: int = N_BITS,
-    signed: bool = True,
-    interpret: bool = False,
-    bm: int = BM,
-    bk: int = BK,
-    bn: int = BN,
+    planes: int,
+    signed: bool,
+    interpret: bool,
+    bm: int,
+    bk: int,
+    bn: int,
 ) -> jax.Array:
-    """(M, K) int8 @ (K, N) int8 -> (M, N) int32, fused bit-plane Horner.
-
-    Shapes must be multiples of the block shape — ``ops.mma_matmul`` pads.
-    """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2 and m % bm == 0 and k % bk == 0 and n % bn == 0, (
@@ -146,27 +139,19 @@ def mma_matmul_pallas(
     )(x, w)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("planes", "signed", "interpret", "bm", "bk", "bn")
-)
-def mma_matmul_scaled_pallas(
+def _mma_matmul_scaled_impl(
     x: jax.Array,
     w: jax.Array,
     x_scale: jax.Array,
     w_scale: jax.Array,
     *,
-    planes: int = N_BITS,
-    signed: bool = True,
-    interpret: bool = False,
-    bm: int = BM,
-    bk: int = BK,
-    bn: int = BN,
+    planes: int,
+    signed: bool,
+    interpret: bool,
+    bm: int,
+    bk: int,
+    bn: int,
 ) -> jax.Array:
-    """Quantized-serving form with the dequant epilogue fused into the
-    flush: (M,K) int8 @ (K,N) int8 -> (M,N) f32 = acc * x_scale * w_scale[n].
-
-    x_scale: () f32 (dynamic per-tensor); w_scale: (N,) f32 (per-channel).
-    """
     m, k = x.shape
     _, n = w.shape
     assert m % bm == 0 and k % bk == 0 and n % bn == 0
@@ -190,3 +175,81 @@ def mma_matmul_scaled_pallas(
         compiler_params=_compiler_params(),
         interpret=interpret,
     )(x, w, x_scale.reshape(1), w_scale.reshape(1, n))
+
+
+@functools.lru_cache(maxsize=None)
+def plane_variant(
+    planes: int,
+    signed: bool = True,
+    *,
+    scaled: bool = False,
+    interpret: bool = False,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+):
+    """Cached jitted kernel variant specialized to one plane budget.
+
+    The plane count is a *specialization axis*: the kernel body unrolls
+    ``planes`` Horner steps, so a 4-plane variant issues exactly half the MXU
+    work of the 8-plane one — a dynamic-precision schedule that assigns a
+    layer 4 planes genuinely runs a smaller kernel, not a masked full-width
+    one.  Each distinct (planes, signed, block) tuple compiles once and is
+    reused across layers and calls; ``plane_variant.cache_info()`` exposes
+    the variant table for tests and benchmarks.
+    """
+    impl = _mma_matmul_scaled_impl if scaled else _mma_matmul_impl
+    fn = functools.partial(
+        impl, planes=planes, signed=signed, interpret=interpret,
+        bm=bm, bk=bk, bn=bn,
+    )
+    # name the variant so it is identifiable in HLO dumps / profiles
+    fn.__name__ = (
+        f"mma_matmul{'_scaled' if scaled else ''}_pallas_p{planes}"
+        f"{'u' if not signed else ''}"
+    )
+    return jax.jit(fn)
+
+
+def mma_matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    planes: int = N_BITS,
+    signed: bool = True,
+    interpret: bool = False,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+) -> jax.Array:
+    """(M, K) int8 @ (K, N) int8 -> (M, N) int32, fused bit-plane Horner.
+
+    Shapes must be multiples of the block shape — ``ops.mma_matmul`` pads.
+    Dispatches through the per-plane-count variant cache.
+    """
+    return plane_variant(
+        planes, signed, interpret=interpret, bm=bm, bk=bk, bn=bn
+    )(x, w)
+
+
+def mma_matmul_scaled_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    *,
+    planes: int = N_BITS,
+    signed: bool = True,
+    interpret: bool = False,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+) -> jax.Array:
+    """Quantized-serving form with the dequant epilogue fused into the
+    flush: (M,K) int8 @ (K,N) int8 -> (M,N) f32 = acc * x_scale * w_scale[n].
+
+    x_scale: () f32 (dynamic per-tensor); w_scale: (N,) f32 (per-channel).
+    """
+    return plane_variant(
+        planes, signed, scaled=True, interpret=interpret, bm=bm, bk=bk, bn=bn
+    )(x, w, x_scale, w_scale)

@@ -24,11 +24,20 @@ def _pad_to(v: int, b: int) -> int:
     return (v + b - 1) // b * b
 
 
+def _normalize_planes(x, planes, *, signed: bool):
+    """Static plane budgets specialize the kernel (cached variant per count,
+    fewer unrolled MXU steps, validated 1..8); traced budgets fold into the
+    data via the exact bit-mask identity and run the full-width variant."""
+    from repro.core import bitplane  # lazy: core.mma imports this module lazily
+
+    return bitplane.normalize_planes(x, planes, signed=signed)
+
+
 def mma_matmul(
     x: jax.Array,
     w: jax.Array,
     *,
-    planes: int = N_BITS,
+    planes: int | jax.Array = N_BITS,
     signed: bool = True,
     interpret: bool | None = None,
     block: tuple[int, int, int] | None = None,
@@ -36,6 +45,7 @@ def mma_matmul(
     """(..., K) int8 @ (K, N) int8 -> (..., N) int32 via the fused kernel."""
     if interpret is None:
         interpret = _on_cpu()
+    x, planes = _normalize_planes(x, planes, signed=signed)
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[-1]
@@ -65,7 +75,7 @@ def mma_matmul_scaled(
     x_scale: jax.Array,
     w_scale: jax.Array,
     *,
-    planes: int = N_BITS,
+    planes: int | jax.Array = N_BITS,
     signed: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -75,6 +85,7 @@ def mma_matmul_scaled(
 
     if interpret is None:
         interpret = _on_cpu()
+    x, planes = _normalize_planes(x, planes, signed=signed)
     lead = x.shape[:-1]
     k, n = x.shape[-1], w.shape[-1]
     m = 1
@@ -99,15 +110,18 @@ def mma_conv2d(
     *,
     stride: int = 1,
     pad: int = 1,
-    planes: int = N_BITS,
+    planes: int | jax.Array = N_BITS,
     signed: bool = True,
     interpret: bool | None = None,
+    impl: str = "pallas",
 ) -> jax.Array:
     """KPB conv: NHWC int8 x (kh, kw, Cin, Cout) int8 -> NHWC int32.
 
     The k*k spatial taps fold into the contraction dim exactly like the KPB
     groups k*k MMA units over one window (Eq. 1): patches (n*oh*ow, kh*kw*cin)
-    @ weights (kh*kw*cin, cout), all through the single fused kernel.
+    @ weights (kh*kw*cin, cout).  ``impl`` selects the matmul datapath:
+    'pallas' (the fused kernel), or any of the ``core.mma`` paths
+    ('xla' | 'cascade' | 'int8') for baselines and CPU-only runs.
     """
     n, h, w_, c = x.shape
     kh, kw, cin, cout = w.shape
@@ -122,11 +136,13 @@ def mma_conv2d(
     ]
     patches = jnp.concatenate(patches, axis=-1)
     wm = w.reshape(kh * kw * cin, cout)
-    out = mma_matmul(
-        patches.reshape(-1, kh * kw * cin),
-        wm,
-        planes=planes,
-        signed=signed,
-        interpret=interpret,
-    )
+    pm = patches.reshape(-1, kh * kw * cin)
+    if impl == "pallas":
+        out = mma_matmul(
+            pm, wm, planes=planes, signed=signed, interpret=interpret
+        )
+    else:
+        from repro.core import mma  # lazy: core.mma imports this module lazily
+
+        out = mma.mma_dot(pm, wm, planes=planes, signed=signed, impl=impl)
     return out.reshape(n, oh, ow, cout)

@@ -8,6 +8,7 @@ frontend per the assignment) is concatenated before the token embeddings.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -93,19 +94,42 @@ def forward(
 
     aux0 = jnp.zeros((), jnp.float32)
 
+    # Per-layer dynamic precision: the schedule rides the layer scan as data
+    # (an (L,) int32 vector of plane budgets).  The scan body folds layer l's
+    # budget into a per-layer QuantConfig; downstream the budget is a traced
+    # scalar, which core.mma resolves via the exact bit-mask truncation
+    # identity — same numerics as static plane truncation, one fused matmul.
+    sched = None
+    if cfg.quant.mode == "mma_int8" and cfg.quant.plane_schedule is not None:
+        from repro.core.plane_schedule import PlaneSchedule
+
+        ps = PlaneSchedule.from_list(cfg.quant.plane_schedule)
+        sched = jnp.asarray(
+            [ps.planes_for(i) for i in range(cfg.n_layers)], jnp.int32
+        )
+
     def body(carry, xs):
         h, aux = carry
+        if sched is not None:
+            xs, planes_l = xs
+            lcfg = cfg.replace(
+                quant=dataclasses.replace(
+                    cfg.quant, planes=planes_l, plane_schedule=None
+                )
+            )
+        else:
+            lcfg = cfg
         if cache is None:
             blk = xs
             if cfg.moe.n_experts:
                 aux = aux + moe_lib.load_balance_loss(
-                    blk["moe"], layers.rmsnorm(blk["ln2"], h, cfg.norm_eps), cfg
+                    blk["moe"], layers.rmsnorm(blk["ln2"], h, cfg.norm_eps), lcfg
                 )
-            h, _ = _block(blk, h, cfg, positions=positions)
+            h, _ = _block(blk, h, lcfg, positions=positions)
             return (h, aux), None
         blk, ck, cv = xs
         h, new_kv = _block(
-            blk, h, cfg, positions=positions, cache=(ck, cv), cache_index=base
+            blk, h, lcfg, positions=positions, cache=(ck, cv), cache_index=base
         )
         return (h, aux), new_kv
 
@@ -114,11 +138,15 @@ def forward(
         block_fn = jax.checkpoint(body, prevent_cse=False)
 
     if cache is None:
-        (x, aux), _ = jax.lax.scan(block_fn, (x, aux0), params["blocks"], unroll=cfg.scan_unroll)
+        blocks_xs = params["blocks"] if sched is None else (params["blocks"], sched)
+        (x, aux), _ = jax.lax.scan(block_fn, (x, aux0), blocks_xs, unroll=cfg.scan_unroll)
         new_cache = None
     else:
+        blocks_xs = (params["blocks"], cache["k"], cache["v"])
+        if sched is not None:
+            blocks_xs = (blocks_xs, sched)
         (x, aux), kv = jax.lax.scan(
-            block_fn, (x, aux0), (params["blocks"], cache["k"], cache["v"]),
+            block_fn, (x, aux0), blocks_xs,
             unroll=cfg.scan_unroll,
         )
         new_cache = {"k": kv[0], "v": kv[1]}

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import mma
 from repro.core.cycle_model import CALIBRATED_UNET, ConvLayerSpec, unet_conv_layers
+from repro.core.plane_schedule import PlaneSchedule
 
 
 @dataclass(frozen=True)
@@ -30,12 +31,21 @@ class UNetConfig:
     n_classes: int = 4
     quant_mode: str = "none"  # 'none' | 'mma_int8'
     planes: int = 8
+    # Per-3x3-conv plane budgets, in forward order (enc, bottleneck, dec) —
+    # same order as ``conv_layers()``.  None -> uniform ``planes``.
+    plane_schedule: tuple[int, ...] | None = None
     impl: str = "xla"  # mma impl: xla | pallas | cascade | int8
     family: str = "unet"
 
     def conv_layers(self) -> list[ConvLayerSpec]:
         return unet_conv_layers(self.hw, self.in_ch, self.base, self.depth,
                                 self.convs_per_stage)
+
+    def schedule(self) -> PlaneSchedule:
+        """The active per-layer precision policy (explicit or uniform)."""
+        if self.plane_schedule is not None:
+            return PlaneSchedule.from_list(self.plane_schedule)
+        return PlaneSchedule.uniform(self.planes, len(self.conv_layers()))
 
 
 def _conv_init(key, kh, kw, cin, cout):
@@ -75,31 +85,25 @@ def init_params(key, cfg: UNetConfig) -> dict:
     return p
 
 
-def conv3x3(p, x, cfg: UNetConfig):
-    """3x3 conv through the selected datapath (float or MMA int8)."""
+def conv3x3(p, x, cfg: UNetConfig, *, planes: int | None = None):
+    """3x3 conv through the selected datapath (float or MMA int8).
+
+    ``planes`` overrides the global ``cfg.planes`` for this layer — the hook
+    the per-layer :class:`PlaneSchedule` drives.  Static per-layer budgets
+    compile one specialized kernel variant per distinct count (shared across
+    layers), so a 4-plane layer runs half the MXU work of an 8-plane one.
+    """
+    if planes is None:
+        planes = cfg.planes
     if cfg.quant_mode == "mma_int8":
         from repro.core import quant
         from repro.kernels import ops
 
         xq = quant.quantize_acts(x)
         wq = quant.quantize_weights(p["w"], channel_axis=-1)
-        if cfg.impl == "pallas":
-            out = ops.mma_conv2d(xq.values, wq.values, planes=cfg.planes)
-        else:
-            # im2col + the selected matmul path (xla horner / cascade / int8)
-            kh, kw, cin, cout = p["w"].shape
-            xp = jnp.pad(xq.values, ((0, 0), (1, 1), (1, 1), (0, 0)))
-            n, h, w_, _ = x.shape
-            patches = jnp.concatenate(
-                [xp[:, i : i + h, j : j + w_, :] for i in range(kh) for j in range(kw)],
-                axis=-1,
-            )
-            out = mma.mma_dot(
-                patches.reshape(-1, kh * kw * cin),
-                wq.values.reshape(kh * kw * cin, cout),
-                planes=cfg.planes,
-                impl=cfg.impl,
-            ).reshape(n, h, w_, cout)
+        out = ops.mma_conv2d(
+            xq.values, wq.values, planes=planes, impl=cfg.impl
+        )
         out = out.astype(jnp.float32) * quant.quantized_matmul_scale(xq.scale, wq.scale)
     else:
         out = jax.lax.conv_general_dilated(
@@ -109,18 +113,32 @@ def conv3x3(p, x, cfg: UNetConfig):
 
 
 def forward(params, x, cfg: UNetConfig):
-    """x: (N, H, W, Cin) -> logits (N, H, W, n_classes)."""
+    """x: (N, H, W, Cin) -> logits (N, H, W, n_classes).
+
+    3x3 convs are visited in the same order as ``cfg.conv_layers()`` /
+    ``unet_conv_layers`` (encoder, bottleneck, decoder), so schedule entry
+    ``l`` lines up with cycle-model layer ``l``.
+    """
+    sched = cfg.schedule() if cfg.quant_mode == "mma_int8" else None
+    li = 0
+
+    def qconv(conv, h):
+        nonlocal li
+        pl = sched.planes_for(li) if sched is not None else None
+        li += 1
+        return jax.nn.relu(conv3x3(conv, h, cfg, planes=pl))
+
     skips = []
     h = x
     for stage in params["enc"]:
         for conv in stage:
-            h = jax.nn.relu(conv3x3(conv, h, cfg))
+            h = qconv(conv, h)
         skips.append(h)
         h = jax.lax.reduce_window(
             h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
         )
     for conv in params["bottleneck"]:
-        h = jax.nn.relu(conv3x3(conv, h, cfg))
+        h = qconv(conv, h)
     for d, stage in enumerate(params["dec"]):
         # 2x nearest upsample (off-accelerator op, like the paper's 2x2 path)
         n, hh, ww, c = h.shape
@@ -129,12 +147,128 @@ def forward(params, x, cfg: UNetConfig):
         )
         h = jnp.concatenate([skips[-(d + 1)], h], axis=-1)
         for conv in stage:
-            h = jax.nn.relu(conv3x3(conv, h, cfg))
+            h = qconv(conv, h)
     out = jax.lax.conv_general_dilated(
         h, params["head"]["w"], (1, 1), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
     return out + params["head"]["b"]
+
+
+def forward_with_error_bound(params, x, cfg: UNetConfig):
+    """Scheduled forward plus a *sound* end-to-end error certificate.
+
+    Returns ``(out_sched, out_full, advertised_rel_bound)`` where
+    ``out_sched`` is the forward under ``cfg``'s plane schedule, ``out_full``
+    the same datapath at full 8-plane precision, and the bound satisfies
+
+        max|out_sched - out_full|  <=  advertised_rel_bound * max|out_full|
+
+    by construction.  The certificate is interval propagation through the
+    exact forward graph: each truncated conv contributes its analytic
+    worst-case truncation error ((2^d - 1) * colsum|w_q|, ``early_term``)
+    plus the activation-requantization jitter of both paths, and upstream
+    error is amplified by the layer's L-inf operator norm (max column L1 of
+    the dequantized weight).  ReLU / maxpool / 2x-upsample are 1-Lipschitz
+    and concat takes the max of branch errors, so the composition is
+    worst-case sound — unlike the first-order per-layer sum
+    (``PlaneSchedule.rel_err_bound``), which ignores inter-layer gain.
+    """
+    from repro.core import quant
+    from repro.core.bitplane import N_BITS
+
+    sched = cfg.schedule()
+    full_cfg = UNetConfig(**{**cfg.__dict__, "plane_schedule": None, "planes": 8})
+    out_full = forward(params, x, full_cfg)
+    out_sched = forward(params, x, cfg)
+
+    # --- interval propagation along the same graph -------------------------
+    li = 0
+    err = 0.0  # abs L-inf bound on (sched activation - full activation)
+
+    def conv_err(p, h_ref, err_in):
+        nonlocal li
+        planes = sched.planes_for(li)
+        li += 1
+        wq = quant.quantize_weights(p["w"], channel_axis=-1)
+        w2 = wq.values.reshape(-1, wq.values.shape[-1]).astype(jnp.int32)
+        ws = jnp.squeeze(wq.scale)  # (cout,)
+        # dequantized per-column L1 — the L-inf operator norm of the conv
+        col_l1 = jnp.sum(jnp.abs(w2), axis=0).astype(jnp.float32) * ws
+        opnorm = float(jnp.max(col_l1))
+        amax_ref = float(jnp.max(jnp.abs(h_ref)))
+        s_ref = max(amax_ref, 1e-8) / 127.0
+        s_sched = max(amax_ref + err_in, 1e-8) / 127.0
+        dropped = N_BITS - planes
+        if err_in == 0.0 and dropped == 0:
+            return 0.0  # identical datapaths
+        # input divergence + the two paths' requantization jitter
+        din = err_in + 0.5 * (s_ref + s_sched)
+        e = opnorm * din
+        if dropped:
+            # truncation of the scheduled path's planes, in float units:
+            # (2^d - 1) * max col-L1 of the dequantized weight * act scale
+            e += (2**dropped - 1) * opnorm * s_sched
+        return e
+
+    # replay the forward structure on the *reference* activations
+    h = x
+    skips = []
+    skip_errs = []
+    for stage in params["enc"]:
+        for conv in stage:
+            err = conv_err(conv, h, err)
+            h = jax.nn.relu(conv3x3(conv, h, full_cfg))
+        skips.append(h)
+        skip_errs.append(err)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    for conv in params["bottleneck"]:
+        err = conv_err(conv, h, err)
+        h = jax.nn.relu(conv3x3(conv, h, full_cfg))
+    for d, stage in enumerate(params["dec"]):
+        n, hh, ww, c = h.shape
+        h = jnp.broadcast_to(h[:, :, None, :, None, :], (n, hh, 2, ww, 2, c)).reshape(
+            n, hh * 2, ww * 2, c
+        )
+        h = jnp.concatenate([skips[-(d + 1)], h], axis=-1)
+        err = max(err, skip_errs[-(d + 1)])
+        for conv in stage:
+            err = conv_err(conv, h, err)
+            h = jax.nn.relu(conv3x3(conv, h, full_cfg))
+    # float 1x1 head, shared by both paths: pure propagation
+    w_head = params["head"]["w"].reshape(-1, params["head"]["w"].shape[-1])
+    err = err * float(jnp.max(jnp.sum(jnp.abs(w_head), axis=0)))
+
+    denom = max(float(jnp.max(jnp.abs(out_full))), 1e-8)
+    return out_sched, out_full, err / denom
+
+
+def conv_weights_in_order(params) -> list[jax.Array]:
+    """Float 3x3-conv weights in forward order (enc, bottleneck, dec)."""
+    ws = []
+    for stage in params["enc"]:
+        ws += [conv["w"] for conv in stage]
+    ws += [conv["w"] for conv in params["bottleneck"]]
+    for stage in params["dec"]:
+        ws += [conv["w"] for conv in stage]
+    return ws
+
+
+def schedule_from_params(
+    params, target_rel_err: float
+) -> PlaneSchedule:
+    """Build the per-layer precision policy from this net's actual weights:
+    quantize each 3x3 conv FBGEMM-style and pick the fewest planes whose
+    analytic worst-case relative error meets ``target_rel_err``."""
+    from repro.core import quant
+
+    wq = [
+        quant.quantize_weights(w, channel_axis=-1).values.reshape(-1, w.shape[-1])
+        for w in conv_weights_in_order(params)
+    ]
+    return PlaneSchedule.from_weights(wq, target_rel_err)
 
 
 def loss_fn(params, batch, cfg: UNetConfig):

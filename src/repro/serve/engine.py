@@ -9,8 +9,13 @@ counterpart of the trainer.
 The engine is family-agnostic: it drives the (prefill, decode) pair from
 ``serve_step.make_*`` so dense KV-cache archs and O(1)-state ssm archs serve
 through the same loop.  With cfg.quant.mode='mma_int8' the whole decode path
-runs the paper's digit-serial datapath, and ``planes`` trades accuracy for
-arithmetic work per token (progressive precision at the serving API).
+runs the paper's digit-serial datapath.  Precision is governed by a
+*per-layer* :class:`~repro.core.plane_schedule.PlaneSchedule`
+(``cfg.quant.plane_schedule``, built from the served weights via
+:func:`lm_schedule_from_params`) rather than one global ``planes`` knob:
+layers whose weight dynamic range tolerates it consume fewer MSB digits,
+trading bounded accuracy loss for serving energy (MINT-style dynamic
+precision).
 """
 from __future__ import annotations
 
@@ -21,6 +26,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import serve_step as ss
+
+
+def lm_schedule_from_params(params, cfg, target_rel_err: float):
+    """Per-layer plane budgets for a scan-rolled LM from its actual weights.
+
+    Uses each layer's FFN up-projection (the widest, most truncation-
+    sensitive matmul of a block) as the representative weight: quantize it
+    per-channel int8 and pick the fewest planes whose analytic worst-case
+    relative error (``core.early_term``) meets ``target_rel_err``.  Install
+    the result with ``cfg.replace(quant=dataclasses.replace(cfg.quant,
+    plane_schedule=tuple(sched)))``.
+    """
+    from repro import models
+    from repro.core import quant
+    from repro.core.plane_schedule import PlaneSchedule
+
+    if cfg.family not in models.PLANE_SCHEDULE_FAMILIES:
+        raise NotImplementedError(
+            f"per-layer plane schedules need a transformer block stack "
+            f"({models.PLANE_SCHEDULE_FAMILIES}); {cfg.family!r} archs "
+            f"serve with the global quant.planes knob"
+        )
+    blocks = params["blocks"]
+    if "mlp" in blocks:
+        ws = blocks["mlp"]["w_up"]["w"]  # (L, d_model, d_ff), stacked
+    else:  # MoE blocks: fall back to the attention query projection
+        ws = blocks["attn"]["wq"]["w"]
+    wq = [
+        quant.quantize_weights(ws[l].astype(jnp.float32), channel_axis=-1).values
+        for l in range(cfg.n_layers)
+    ]
+    return PlaneSchedule.from_weights(wq, target_rel_err)
 
 
 @dataclass

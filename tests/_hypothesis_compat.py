@@ -1,0 +1,84 @@
+"""Hypothesis with a fallback: the real library when installed, else a
+minimal deterministic shim implementing exactly the subset this suite uses
+(``st.integers``, ``st.lists``, ``st.data``; ``@given``; ``@settings``).
+
+The shim draws a fixed number of pseudo-random examples per test (seeded by
+the test name, so runs are reproducible) instead of hypothesis' adaptive
+search + shrinking.  Weaker at finding new counterexamples, but it keeps the
+properties *executing* on machines without the dev extra — tier-1 must
+collect and run everywhere.  Install the real thing with
+
+    pip install -r requirements-dev.txt
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _MAX_EXAMPLES_CAP = 25  # the shim has no shrinker; keep runs quick
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rnd: random.Random):
+            return self._draw_fn(rnd)
+
+    class _DataObject:
+        """Shim of hypothesis' interactive ``data()`` draw handle."""
+
+        def __init__(self, rnd: random.Random):
+            self._rnd = rnd
+
+        def draw(self, strategy: _Strategy):
+            return strategy.draw(self._rnd)
+
+    class st:  # noqa: N801 - mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+            def draw(rnd):
+                n = rnd.randint(min_size, max_size)
+                return [elements.draw(rnd) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def data() -> _Strategy:
+            return _Strategy(lambda rnd: _DataObject(rnd))
+
+    def settings(*, max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+            return fn
+
+        return deco
+
+    def given(*strategies: _Strategy, **kw_strategies: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(fn, "_compat_max_examples", 20)
+                for i in range(n):
+                    rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}:{i}")
+                    args = [s.draw(rnd) for s in strategies]
+                    kwargs = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            # strategy-filled params must not look like pytest fixtures
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

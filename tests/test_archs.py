@@ -15,6 +15,8 @@ from repro.models import build
 from repro.optim import adamw
 from repro.train import train_step as ts
 
+pytestmark = pytest.mark.slow  # CI runs these in the non-blocking slow job
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -1,0 +1,84 @@
+"""Golden lock on the cycle model: the calibrated relation-(2) outputs and
+the Table-1 targets they reproduce.  Any refactor of core/cycle_model.py
+that silently drifts these numbers (and hence the paper comparison) fails
+here, not three PRs later in a benchmark diff."""
+import pytest
+
+from repro.core import cycle_model as cm
+
+
+@pytest.fixture(scope="module")
+def layers():
+    return cm.unet_conv_layers(**cm.CALIBRATED_UNET)
+
+
+def test_paper_constants():
+    # relation (2) building blocks, exactly as printed (n=8, T_N=32)
+    assert cm.p_out() == 21
+    assert cm.mma_tile_cycles() == 28
+    assert cm.cascaded_tile_cycles() == 34
+    assert cm.pipelined_tile_cycles() == 16
+
+
+def test_table1_proposed_row_as_printed():
+    row = cm.PAPER_TABLE1["proposed"]
+    assert row["time_ms"] == 53.25
+    assert row["gops"] == 52.95
+    assert row["gops_w"] == 15.14
+    # derived-column consistency: power and energy follow the definitions
+    power = row["gops"] / row["gops_w"]
+    assert power == pytest.approx(3.497, abs=2e-3)
+    assert power * row["time_ms"] == pytest.approx(row["e_mj"], rel=2e-3)
+
+
+def test_calibrated_unet_golden(layers):
+    """The calibrated config's relation-(2) outputs, locked exactly."""
+    assert cm.CALIBRATED_UNET == dict(
+        hw=80, in_ch=4, base=48, depth=3, convs_per_stage=1
+    )
+    assert len(layers) == 7
+    assert cm.model_ops(layers) == 2_809_036_800
+    # pipelined steady state: the mode that jointly matches Table 1
+    cyc = cm.model_cycles(layers, tile_cycles=cm.pipelined_tile_cycles())
+    assert cyc == 5_376_000
+    t_ms = cyc / cm.FREQ_HZ * 1e3
+    gops = cm.model_ops(layers) / (t_ms * 1e-3) / 1e9
+    assert t_ms == pytest.approx(53.76, abs=1e-9)
+    assert gops == pytest.approx(52.2514, abs=1e-3)
+    # within the calibration residuals of Table 1 (53.25 ms, 52.95 GOPS)
+    assert abs(t_ms - 53.25) / 53.25 < 0.011
+    assert abs(gops - 52.95) / 52.95 < 0.014
+    power = cm.PAPER_TABLE1["proposed"]["gops"] / cm.PAPER_TABLE1["proposed"]["gops_w"]
+    assert gops / power == pytest.approx(14.9403, abs=1e-3)  # vs 15.14 GOPS/W
+
+
+def test_relation2_as_printed_golden(layers):
+    assert cm.model_cycles(layers) == 9_408_000
+    row = cm.proposed_row(layers)
+    assert row.time_ms == pytest.approx(94.08, abs=1e-9)
+    assert row.gops == pytest.approx(29.858, abs=1e-3)
+
+
+def test_schedule_cycles_consistency(layers):
+    """Dynamic precision reduces relation-(2) linearly in planes
+    (pipelined interval = 2b) and uniform-8 equals the static model."""
+    full = cm.model_cycles(layers, tile_cycles=cm.pipelined_tile_cycles())
+    assert cm.schedule_cycles(layers, [8] * len(layers)) == full
+    assert cm.schedule_cycles(layers, [4] * len(layers)) == full // 2
+    assert cm.schedule_cycles(layers, [2] * len(layers)) == full // 4
+    # mixed schedule: sum of per-layer terms, monotone in every entry
+    per = cm.schedule_layer_cycles(layers, [8, 7, 6, 5, 4, 3, 2])
+    assert sum(per) == cm.schedule_cycles(layers, [8, 7, 6, 5, 4, 3, 2])
+    assert sum(per) < full
+    row = cm.schedule_row(layers, [4] * len(layers))
+    assert row.time_ms == pytest.approx(26.88, abs=1e-9)
+    assert row.gops_per_w == pytest.approx(2 * 14.9403, abs=1e-2)
+
+
+def test_schedule_as_printed_mode(layers):
+    """mode='as_printed' shrinks p_out with the digit count but keeps the
+    fixed delays, so savings are sublinear — unlike pipelined mode."""
+    full = cm.schedule_cycles(layers, [8] * 7, mode="as_printed")
+    half = cm.schedule_cycles(layers, [4] * 7, mode="as_printed")
+    assert full == cm.model_cycles(layers)
+    assert full > half > full // 2

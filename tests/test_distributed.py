@@ -12,6 +12,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # CI runs these in the non-blocking slow job
+
 SUB = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -115,6 +117,7 @@ with tempfile.TemporaryDirectory() as td:
 # --- EP MoE (shard_map all-to-all) == GSPMD dispatch path, dropless
 import dataclasses as dc
 from repro.models import moe as moe_lib
+
 mcfg = get_smoke_config("olmoe_1b_7b")
 mcfg = mcfg.replace(moe=dc.replace(mcfg.moe, capacity_factor=64.0, ep=True))
 mp = moe_lib.init_moe(jax.random.PRNGKey(3), mcfg)
@@ -134,8 +137,11 @@ def test_distributed_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", SUB],
         capture_output=True, text=True, timeout=900,
+        # JAX_PLATFORMS=cpu: these are forced-host-device tests; without it
+        # jax probes for a TPU backend in the stripped env and can hang for
+        # minutes before falling back.
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
-             "HOME": "/root"},
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert "SUBPROCESS_OK" in r.stdout, r.stdout + "\n" + r.stderr

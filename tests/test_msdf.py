@@ -3,7 +3,7 @@ arithmetic): MMA units, online adders, the full KPB — property-tested with
 hypothesis against plain integer dot products."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.msdf import (
     DELTA_MMA,
