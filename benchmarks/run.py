@@ -1,8 +1,10 @@
 """Benchmark harness — one section per paper table/claim.
 
-    PYTHONPATH=src python -m benchmarks.run [--section table1|kernels|roofline|msdf|precision]
+    PYTHONPATH=src python -m benchmarks.run \
+        [--section table1|kernels|roofline|msdf|precision|segserve]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  The segserve section also
+writes machine-readable ``BENCH_segserve.json`` for the bench tracker.
 """
 from __future__ import annotations
 
@@ -64,6 +66,10 @@ def main() -> None:
         from benchmarks import precision_sweep
 
         rows += precision_sweep.run()
+    if args.section in ("all", "segserve"):
+        from benchmarks import segserve
+
+        rows += segserve.run()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,0 +1,146 @@
+"""Segmentation-serving benchmark: tiled U-Net with content-adaptive tile
+precision, the bench the tracker ingests (``BENCH_segserve.json``).
+
+A synthetic medical-style image (quiet background + a bright structure)
+is served three ways through :class:`repro.segserve.SegEngine`:
+
+  * ``full-8``   — every tile at full 8-plane precision (baseline);
+  * ``uniform``  — the certified per-layer schedule, same for every tile;
+  * ``adaptive`` — the same layer schedule refined per tile budget class
+                   (flat background tiles consume fewer MSB digits).
+
+Reported per row: relation-(2) cycles, modeled time, GOPS, GOPS/W and
+energy at the paper's implied accelerator power, plus the measured max
+relative error against the full-8 run.  The headline the tracker watches:
+``adaptive`` cycles < ``uniform`` cycles at the same certified target.
+
+    PYTHONPATH=src python -m benchmarks.run --section segserve
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+# Small-but-real default geometry: calibrated depth, reduced width so the
+# CI smoke stays fast.  --full in __main__ runs the calibrated base.  The
+# canvas is large relative to the halo (24 px at depth 3) so background
+# tiles exist whose *windows* clear the structure — the content-adaptive
+# case the bench exists to price.
+GEOMETRY = dict(depth=3, base=16, in_ch=4, n_classes=4)
+IMAGE_HW = (160, 128)
+TILE = 32
+TARGET_REL_ERR = 0.05
+
+
+def run(
+    *,
+    base: int | None = None,
+    image_hw: tuple[int, int] = IMAGE_HW,
+    tile: int = TILE,
+    target_rel_err: float = TARGET_REL_ERR,
+    json_path: str | None = "BENCH_segserve.json",
+) -> list[tuple[str, float, str]]:
+    import jax
+
+    from repro.models import unet as unet_mod
+    from repro.segserve import SegEngine
+    from repro.segserve.synth import phantom_image
+
+    geo = dict(GEOMETRY)
+    if base is not None:
+        geo["base"] = base
+    cfg = unet_mod.UNetConfig(
+        hw=image_hw[0], in_ch=geo["in_ch"], base=geo["base"],
+        depth=geo["depth"], convs_per_stage=1, n_classes=geo["n_classes"],
+        quant_mode="mma_int8", impl="xla",
+    )
+    params = unet_mod.init_params(jax.random.PRNGKey(0), cfg)
+    sched = unet_mod.schedule_from_params(params, target_rel_err)
+    scfg = dataclasses.replace(cfg, plane_schedule=tuple(sched.planes))
+    image = phantom_image(*image_hw, geo["in_ch"])
+
+    variants = [
+        ("full-8", cfg, False),
+        ("uniform", scfg, False),
+        ("adaptive", scfg, True),
+    ]
+    results = {}
+    wall_us = {}
+    for name, vcfg, adapt in variants:
+        eng = SegEngine(vcfg, params, tile=tile, batch=4, adaptive=adapt)
+        t0 = time.perf_counter()
+        results[name] = eng.run([image])[0]
+        wall_us[name] = (time.perf_counter() - t0) * 1e6
+
+    ref = results["full-8"].logits
+    denom = max(float(np.max(np.abs(ref))), 1e-8)
+    rows = []
+    payload_rows = []
+    for name, _, _ in variants:
+        r = results[name]
+        rel_err = float(np.max(np.abs(r.logits - ref))) / denom
+        rows.append(
+            (
+                f"segserve/{name}",
+                r.time_ms * 1e3,  # modeled us, like precision_sweep
+                f"cycles={r.cycles};tiles={r.n_tiles};"
+                f"classes={'/'.join(f'{k}:{v}' for k, v in r.class_counts.items())};"
+                f"gops={r.gops:.2f};gops_w={r.gops_per_w:.2f};"
+                f"e_mj={r.energy_mj:.1f};rel_err={rel_err:.4g}",
+            )
+        )
+        payload_rows.append(
+            dict(
+                name=name,
+                cycles=r.cycles,
+                ops=r.ops,
+                n_tiles=r.n_tiles,
+                class_counts={str(k): v for k, v in r.class_counts.items()},
+                time_ms=r.time_ms,
+                gops=r.gops,
+                gops_w=r.gops_per_w,
+                energy_mj=r.energy_mj,
+                rel_err=rel_err,
+                wall_us=wall_us[name],
+            )
+        )
+
+    if json_path:
+        payload = dict(
+            bench="segserve",
+            geometry=dict(geo, image_h=image_hw[0], image_w=image_hw[1],
+                          tile=tile, halo=_halo(geo["depth"])),
+            target_rel_err=target_rel_err,
+            schedule=list(sched.planes),
+            rows=payload_rows,
+            adaptive_speedup_vs_uniform=(
+                results["uniform"].cycles / results["adaptive"].cycles
+            ),
+        )
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+def _halo(depth: int) -> int:
+    from repro.segserve import halo_for
+
+    return halo_for(depth, 1)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="calibrated base-48 width (slow on CPU)")
+    ap.add_argument("--json", default="BENCH_segserve.json")
+    args = ap.parse_args()
+    for name, us, derived in run(
+        base=48 if args.full else None, json_path=args.json
+    ):
+        print(f"{name},{us:.1f},{derived}")

@@ -106,7 +106,7 @@ class ConvLayerSpec:
 
 
 def unet_conv_layers(
-    hw: int = 128,
+    hw: int | tuple[int, int] = 128,
     in_ch: int = 4,
     base: int = 32,
     depth: int = 4,
@@ -115,32 +115,37 @@ def unet_conv_layers(
     """Standard U-Net 3x3 conv stack (encoder/bottleneck/decoder with skip
     concatenation).  2x2 up/down-sampling and the final 1x1 conv are not k=3
     convolutions and run off the accelerator (paper Sec. 3.1: larger/other
-    kernels are decomposed or handled by reconfiguration)."""
+    kernels are decomposed or handled by reconfiguration).
+
+    ``hw`` is a square size or an ``(h, w)`` pair — rectangular geometries
+    cost halo tiles of the segmentation server (``repro.segserve``)."""
     layers: list[ConvLayerSpec] = []
     ch = in_ch
-    size = hw
+    size_h, size_w = (hw, hw) if isinstance(hw, int) else hw
     enc_ch = []
     for d in range(depth):
         c = base * (2**d)
-        layers.append(ConvLayerSpec(size, size, ch, c))
+        layers.append(ConvLayerSpec(size_h, size_w, ch, c))
         for _ in range(convs_per_stage - 1):
-            layers.append(ConvLayerSpec(size, size, c, c))
+            layers.append(ConvLayerSpec(size_h, size_w, c, c))
         enc_ch.append(c)
         ch = c
-        size //= 2
+        size_h //= 2
+        size_w //= 2
     # bottleneck
     c = base * (2**depth)
-    layers.append(ConvLayerSpec(size, size, ch, c))
+    layers.append(ConvLayerSpec(size_h, size_w, ch, c))
     for _ in range(convs_per_stage - 1):
-        layers.append(ConvLayerSpec(size, size, c, c))
+        layers.append(ConvLayerSpec(size_h, size_w, c, c))
     ch = c
     # decoder (skip concat doubles input channels of the first conv)
     for d in reversed(range(depth)):
-        size *= 2
+        size_h *= 2
+        size_w *= 2
         c = enc_ch[d]
-        layers.append(ConvLayerSpec(size, size, c + ch, c))
+        layers.append(ConvLayerSpec(size_h, size_w, c + ch, c))
         for _ in range(convs_per_stage - 1):
-            layers.append(ConvLayerSpec(size, size, c, c))
+            layers.append(ConvLayerSpec(size_h, size_w, c, c))
         ch = c
     return layers
 

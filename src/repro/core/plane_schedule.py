@@ -124,6 +124,50 @@ class PlaneSchedule:
         """(L,) int32 — the form that rides a ``lax.scan`` over layers."""
         return jnp.asarray(self.planes, jnp.int32)
 
+    # ----------------------------------------------------- tile refinement
+
+    def refine(self, amp_ratio: float) -> "PlaneSchedule":
+        """Content-adaptive *tile-level* refinement of this (layer-level)
+        schedule, the per-region precision assignment of MINT.
+
+        ``amp_ratio`` (0 < r <= 1) is the activation amplitude of a spatial
+        region (an image tile) relative to the level this schedule was
+        certified at.  Dynamic per-tile quantization gives that region a
+        scale ``r``x smaller, so each truncated digit costs ``r``x less
+        *absolute* error; layer ``l`` may therefore drop extra LSB digits
+        while staying inside the absolute budget its certified bound
+        already pays for:
+
+            largest d' such that (2^d' - 1) * r  <=  2^d_l - 1
+
+        with ``d_l = 8 - planes[l]`` the drop the layer schedule certified.
+        By construction the refined tile error, expressed in the schedule's
+        calibration units, never exceeds ``layer_bounds[l]`` — flat
+        background tiles consume fewer MSB digits for free.  Full-precision
+        layers (``d_l = 0``, zero certified budget) are never refined, and
+        ``r = 1`` is the identity.
+        """
+        if not (0.0 < amp_ratio <= 1.0):
+            raise ValueError(f"amp_ratio {amp_ratio} outside (0, 1]")
+        refined = []
+        for b in self.planes:
+            d = N_BITS - b
+            if d == 0:
+                refined.append(b)
+                continue
+            budget = float(2**d - 1)
+            d2 = d
+            while d2 < N_BITS - 1 and (2 ** (d2 + 1) - 1) * amp_ratio <= budget:
+                d2 += 1
+            refined.append(N_BITS - d2)
+        # layer_bounds stay valid: they bound the refined tile's error in
+        # the original calibration units (the invariant ``refine`` keeps).
+        return PlaneSchedule(
+            planes=tuple(refined),
+            target_rel_err=self.target_rel_err,
+            layer_bounds=self.layer_bounds,
+        )
+
     # ------------------------------------------------------------- metrics
 
     def arithmetic_fraction(self) -> float:

@@ -110,6 +110,7 @@ def mma_conv2d(
     *,
     stride: int = 1,
     pad: int = 1,
+    pad_mode: str = "zero",
     planes: int | jax.Array = N_BITS,
     signed: bool = True,
     interpret: bool | None = None,
@@ -122,11 +123,24 @@ def mma_conv2d(
     @ weights (kh*kw*cin, cout).  ``impl`` selects the matmul datapath:
     'pallas' (the fused kernel), or any of the ``core.mma`` paths
     ('xla' | 'cascade' | 'int8') for baselines and CPU-only runs.
+
+    ``pad_mode`` selects what fills the ``pad`` border ring: 'zero' (the
+    FBGEMM/XLA SAME convention), or 'edge' / 'reflect' (replicate /
+    mirror the boundary row).  Non-zero modes serve halo-free image tiles
+    (``repro.segserve``): a tile cut from a larger image has real content
+    past its edge, and replicating the boundary row approximates it far
+    better than a hard zero seam.
     """
     n, h, w_, c = x.shape
     kh, kw, cin, cout = w.shape
     assert c == cin
-    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    pad_widths = ((0, 0), (pad, pad), (pad, pad), (0, 0))
+    if pad_mode == "zero":
+        xp = jnp.pad(x, pad_widths)
+    elif pad_mode in ("edge", "reflect"):
+        xp = jnp.pad(x, pad_widths, mode=pad_mode)
+    else:
+        raise ValueError(f"unknown pad_mode {pad_mode!r}")
     oh = (h + 2 * pad - kh) // stride + 1
     ow = (w_ + 2 * pad - kw) // stride + 1
     patches = [

@@ -11,6 +11,7 @@ The default geometry is the Table-1-calibrated config
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import jax
@@ -35,6 +36,10 @@ class UNetConfig:
     # same order as ``conv_layers()``.  None -> uniform ``planes``.
     plane_schedule: tuple[int, ...] | None = None
     impl: str = "xla"  # mma impl: xla | pallas | cascade | int8
+    # Border fill of every 3x3 conv: 'zero' (the SAME convention) or
+    # 'edge' / 'reflect' — the external padding control halo-free image
+    # tiles use (see kernels.ops.mma_conv2d and repro.segserve).
+    pad_mode: str = "zero"
     family: str = "unet"
 
     def conv_layers(self) -> list[ConvLayerSpec]:
@@ -43,9 +48,17 @@ class UNetConfig:
 
     def schedule(self) -> PlaneSchedule:
         """The active per-layer precision policy (explicit or uniform)."""
+        n = len(self.conv_layers())
         if self.plane_schedule is not None:
+            if len(self.plane_schedule) != n:
+                raise ValueError(
+                    f"plane_schedule has {len(self.plane_schedule)} entries "
+                    f"but this geometry (depth={self.depth}, "
+                    f"convs_per_stage={self.convs_per_stage}) has {n} 3x3 "
+                    f"convs — one budget per conv, in forward order"
+                )
             return PlaneSchedule.from_list(self.plane_schedule)
-        return PlaneSchedule.uniform(self.planes, len(self.conv_layers()))
+        return PlaneSchedule.uniform(self.planes, n)
 
 
 def _conv_init(key, kh, kw, cin, cout):
@@ -102,12 +115,18 @@ def conv3x3(p, x, cfg: UNetConfig, *, planes: int | None = None):
         xq = quant.quantize_acts(x)
         wq = quant.quantize_weights(p["w"], channel_axis=-1)
         out = ops.mma_conv2d(
-            xq.values, wq.values, planes=planes, impl=cfg.impl
+            xq.values, wq.values, planes=planes, impl=cfg.impl,
+            pad_mode=cfg.pad_mode,
         )
         out = out.astype(jnp.float32) * quant.quantized_matmul_scale(xq.scale, wq.scale)
-    else:
+    elif cfg.pad_mode == "zero":
         out = jax.lax.conv_general_dilated(
             x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+    else:
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)), mode=cfg.pad_mode)
+        out = jax.lax.conv_general_dilated(
+            xp, p["w"], (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
         )
     return out + p["b"]
 
@@ -118,7 +137,19 @@ def forward(params, x, cfg: UNetConfig):
     3x3 convs are visited in the same order as ``cfg.conv_layers()`` /
     ``unet_conv_layers`` (encoder, bottleneck, decoder), so schedule entry
     ``l`` lines up with cycle-model layer ``l``.
+
+    Spatial dims need not equal ``cfg.hw`` (halo tiles of the segmentation
+    server run rectangular crops through this same function), but both must
+    divide by ``2**depth`` so the pool/upsample ladder round-trips; anything
+    else used to die deep in the decoder concat, so reject it up front.
     """
+    mult = 2**cfg.depth
+    if x.shape[1] % mult or x.shape[2] % mult:
+        raise ValueError(
+            f"spatial dims {x.shape[1]}x{x.shape[2]} not divisible by "
+            f"2**depth = {mult}; pad the input (segserve.tiling.plan_tiles "
+            f"does this for arbitrary images)"
+        )
     sched = cfg.schedule() if cfg.quant_mode == "mma_int8" else None
     li = 0
 
@@ -178,7 +209,7 @@ def forward_with_error_bound(params, x, cfg: UNetConfig):
     from repro.core.bitplane import N_BITS
 
     sched = cfg.schedule()
-    full_cfg = UNetConfig(**{**cfg.__dict__, "plane_schedule": None, "planes": 8})
+    full_cfg = dataclasses.replace(cfg, plane_schedule=None, planes=8)
     out_full = forward(params, x, full_cfg)
     out_sched = forward(params, x, cfg)
 

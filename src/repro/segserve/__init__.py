@@ -1,0 +1,15 @@
+"""Streaming tiled-segmentation serving: the paper's target application
+(U-Net medical-image segmentation) as a served workload.
+
+``tiling``   — receptive-field-exact halo decomposition + stitching of
+               arbitrary (H, W) images, numerically equivalent to the
+               whole-image forward;
+``adaptive`` — content-adaptive per-tile plane budgets (flat background
+               tiles consume fewer MSB digits), layered on the certified
+               per-layer :class:`~repro.core.PlaneSchedule`;
+``engine``   — request-queue + slot-table micro-batching executor with
+               per-image relation-(2) cycle / GOPS/W accounting.
+"""
+from . import adaptive, engine, synth, tiling  # noqa: F401
+from .engine import SegEngine, SegRequest, SegResult  # noqa: F401
+from .tiling import halo_for, plan_tiles, stitch, tiled_forward  # noqa: F401

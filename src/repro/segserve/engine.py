@@ -1,0 +1,287 @@
+"""Tiled-segmentation serving engine: request queue + slot table +
+shape/class-grouped micro-batching, with per-image energy accounting.
+
+The LM engine's loop, re-based on image tiles: requests (arbitrary-size
+images) wait in a FIFO, a bounded slot table caps in-flight stitching
+canvases, and the unit of batched work is a *micro-batch of tiles* instead
+of one token per sequence.  Tiles are grouped by
+
+    (input window shape, budget class, image amplitude octave)
+
+and packed into fixed-size batches (padded with zero tiles), so the jit
+cache holds one executable per group signature — a handful per image
+geometry, reused across every request — and inside each executable the
+static per-layer plane counts hit the same
+``kernels.mma_matmul.plane_variant`` specializations.  Groups freely mix
+tiles of different requests: micro-batching across the queue is the whole
+point of the slot table.
+
+Accounting mirrors the LM engine's energy story, per *image*: relation-(2)
+cycles of every tile the image consumed (halo overhead included, priced
+honestly) under its refined schedule, against the useful whole-canvas ops
+— time, GOPS and GOPS/W at the paper's implied accelerator power.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cycle_model as cm
+from repro.core.plane_schedule import PlaneSchedule
+from repro.models import unet
+from repro.serve.queue import FifoQueue, SlotTable
+
+from . import adaptive, tiling
+
+_IMPLIED_POWER_W = (
+    cm.PAPER_TABLE1["proposed"]["gops"] / cm.PAPER_TABLE1["proposed"]["gops_w"]
+)
+
+
+@dataclass
+class SegResult:
+    """One served image: stitched logits + the modeled energy account."""
+
+    logits: np.ndarray  # (H, W, n_classes) f32
+    cycles: int
+    ops: int
+    n_tiles: int
+    class_counts: dict[int, int]  # budget class -> tile count
+
+    @property
+    def time_ms(self) -> float:
+        return self.cycles / cm.FREQ_HZ * 1e3
+
+    @property
+    def gops(self) -> float:
+        return self.ops / (self.time_ms * 1e-3) / 1e9
+
+    @property
+    def gops_per_w(self) -> float:
+        return self.gops / _IMPLIED_POWER_W
+
+    @property
+    def energy_mj(self) -> float:
+        return _IMPLIED_POWER_W * self.time_ms
+
+
+@dataclass
+class SegRequest:
+    rid: int
+    image: np.ndarray  # (H, W, C)
+    # filled at admission
+    plan: tiling.TilePlan | None = None
+    slot: int = -1
+    canvas_in: np.ndarray | None = None
+    canvas_out: np.ndarray | None = None
+    remaining: int = 0
+    cycles: int = 0
+    ops: int = 0
+    class_counts: dict[int, int] = field(default_factory=dict)
+    result: SegResult | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class SegEngine:
+    """Micro-batching executor for U-Net segmentation requests.
+
+    Args:
+      cfg: the :class:`~repro.models.unet.UNetConfig` to serve (its
+        ``plane_schedule`` / ``planes`` is the certified layer-level
+        policy; ``quant_mode='none'`` serves the float datapath and makes
+        tiling bit-comparable to the whole-image forward).
+      params: U-Net params for ``cfg``.
+      tile: core stride (multiple of ``2**depth``).
+      halo: exact by default (:func:`~repro.segserve.tiling.halo_for`);
+        0 + ``cfg.pad_mode='edge'`` is the cheap seam-tolerant mode.
+      batch: fixed tile micro-batch size (short groups are zero-padded).
+      max_active: slot-table capacity — concurrent stitching canvases.
+      adaptive: refine the layer schedule per budget class (quantized
+        datapath only).
+      max_class: amplitude-octave cap for flat/empty tiles.
+    """
+
+    def __init__(
+        self,
+        cfg: unet.UNetConfig,
+        params,
+        *,
+        tile: int = 32,
+        halo: int | None = None,
+        batch: int = 4,
+        max_active: int = 4,
+        adaptive: bool = True,
+        max_class: int = adaptive.MAX_CLASS,
+    ):
+        self.cfg = cfg
+        self.params = params
+        mult = 2**cfg.depth
+        if tile < mult or tile % mult:
+            raise ValueError(
+                f"tile {tile} must be a positive multiple of 2**depth = {mult}"
+            )
+        if halo is not None and halo < 0:
+            raise ValueError(f"halo {halo} < 0")
+        if batch < 1:
+            raise ValueError(f"batch {batch} < 1")
+        self.tile = tile
+        self.halo = halo
+        self.batch = batch
+        self.adaptive = adaptive and cfg.quant_mode == "mma_int8"
+        self.max_class = max_class
+        self.base_schedule = (
+            cfg.schedule()
+            if cfg.quant_mode == "mma_int8"
+            else PlaneSchedule.uniform(8, len(cfg.conv_layers()))
+        )
+        self.queue: FifoQueue[SegRequest] = FifoQueue()
+        self.slots: SlotTable[SegRequest] = SlotTable(max_active)
+        # (in_h, in_w, class, amax_octave) -> [(request, tile_index), ...]
+        self._tasks: dict[tuple[int, int, int, int], list] = {}
+        self._fwd = jax.jit(unet.forward, static_argnums=2)
+        self._cfg_for_class: dict[int, unet.UNetConfig] = {}
+        self._cycles_for: dict[tuple[int, int, int], int] = {}
+        self._next_rid = 0
+
+    # ----------------------------------------------------------- schedules
+
+    def class_cfg(self, k: int) -> unet.UNetConfig:
+        """The (static, jit-cache-keyed) config class-``k`` batches run."""
+        if k not in self._cfg_for_class:
+            refined = adaptive.class_schedule(self.base_schedule, k)
+            cfg = self.cfg
+            if cfg.quant_mode == "mma_int8":
+                cfg = dataclasses.replace(
+                    cfg, plane_schedule=tuple(refined.planes)
+                )
+            self._cfg_for_class[k] = cfg
+        return self._cfg_for_class[k]
+
+    def _tile_cycles(self, in_h: int, in_w: int, k: int) -> int:
+        """Relation-(2) cycles of one (in_h, in_w) tile at class ``k``."""
+        key = (in_h, in_w, k)
+        if key not in self._cycles_for:
+            layers = cm.unet_conv_layers(
+                (in_h, in_w), self.cfg.in_ch, self.cfg.base, self.cfg.depth,
+                self.cfg.convs_per_stage,
+            )
+            sched = adaptive.class_schedule(self.base_schedule, k)
+            self._cycles_for[key] = cm.schedule_cycles(layers, sched)
+        return self._cycles_for[key]
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, image: np.ndarray) -> SegRequest:
+        """Enqueue one (H, W, C) image; returns its request handle."""
+        image = np.asarray(image)
+        if (image.ndim != 3 or image.shape[-1] != self.cfg.in_ch
+                or image.shape[0] < 1 or image.shape[1] < 1):
+            raise ValueError(
+                f"expected (H, W, {self.cfg.in_ch}) image with H, W >= 1, "
+                f"got {image.shape}"
+            )
+        req = SegRequest(rid=self._next_rid, image=image)
+        self._next_rid += 1
+        self.queue.push(req)
+        return req
+
+    def _admit(self, req: SegRequest) -> bool:
+        # Plan before occupying: a planning error must not leak the slot.
+        req.plan = tiling.plan_tiles(
+            req.image.shape[0], req.image.shape[1], depth=self.cfg.depth,
+            convs_per_stage=self.cfg.convs_per_stage, tile=self.tile,
+            halo=self.halo,
+        )
+        slot = self.slots.occupy(req)
+        if slot is None:
+            return False
+        req.slot = slot
+        canvas = tiling.pad_canvas(req.image.astype(np.float32), req.plan)
+        req.canvas_in = canvas
+        req.canvas_out = np.zeros(
+            (req.plan.pad_h, req.plan.pad_w, self.cfg.n_classes), np.float32
+        )
+        req.remaining = req.plan.n_tiles
+        req.ops = cm.model_ops(
+            cm.unet_conv_layers(
+                (req.plan.pad_h, req.plan.pad_w), self.cfg.in_ch,
+                self.cfg.base, self.cfg.depth, self.cfg.convs_per_stage,
+            )
+        )
+        amax = float(np.max(np.abs(canvas)))
+        if self.adaptive:
+            classes = adaptive.classify_tiles(
+                canvas, req.plan, max_class=self.max_class, amax=amax
+            )
+        else:
+            classes = [0] * req.plan.n_tiles
+        octave = int(math.floor(math.log2(amax))) if amax > 0 else 0
+        for ti, (spec, k) in enumerate(zip(req.plan.tiles, classes)):
+            key = (spec.in_h, spec.in_w, k, octave)
+            self._tasks.setdefault(key, []).append((req, ti))
+            req.class_counts[k] = req.class_counts.get(k, 0) + 1
+        return True
+
+    # ------------------------------------------------------------- stepping
+
+    def step(self) -> bool:
+        """Run one micro-batch (oldest group first); False when idle."""
+        if not self._tasks:
+            return False
+        key = next(iter(self._tasks))
+        group = self._tasks[key]
+        taken, self._tasks[key] = group[: self.batch], group[self.batch :]
+        if not self._tasks[key]:
+            del self._tasks[key]
+        in_h, in_w, k, _octave = key
+        x = np.zeros((self.batch, in_h, in_w, self.cfg.in_ch), np.float32)
+        for b, (req, ti) in enumerate(taken):
+            spec = req.plan.tiles[ti]
+            x[b] = req.canvas_in[spec.y0 : spec.y1, spec.x0 : spec.x1]
+        out = np.asarray(self._fwd(self.params, jnp.asarray(x), self.class_cfg(k)))
+        for b, (req, ti) in enumerate(taken):
+            spec = req.plan.tiles[ti]
+            cy, cx = spec.crop
+            req.canvas_out[
+                spec.core_y0 : spec.core_y1, spec.core_x0 : spec.core_x1
+            ] = out[b][cy, cx]
+            req.cycles += self._tile_cycles(in_h, in_w, k)
+            req.remaining -= 1
+            if req.remaining == 0:
+                self._finish(req)
+        return True
+
+    def _finish(self, req: SegRequest) -> None:
+        req.result = SegResult(
+            logits=req.canvas_out[: req.plan.h, : req.plan.w].copy(),
+            cycles=req.cycles,
+            ops=req.ops,
+            n_tiles=req.plan.n_tiles,
+            class_counts=dict(sorted(req.class_counts.items())),
+        )
+        self.slots.release(req.slot)
+        req.canvas_in = None
+        req.canvas_out = None
+
+    # ------------------------------------------------------------ the loop
+
+    def run(self, images: list[np.ndarray]) -> list[SegResult]:
+        """Serve a batch of images to completion, in submission order."""
+        reqs = [self.submit(im) for im in images]
+        self.flush()
+        return [r.result for r in reqs]
+
+    def flush(self) -> None:
+        """Drain the queue and every in-flight request."""
+        while self.queue or self.slots.any_active() or self._tasks:
+            self.queue.pump(self.slots, self._admit)
+            if not self.step() and not self.queue:
+                break

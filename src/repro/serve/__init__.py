@@ -1,1 +1,14 @@
-from . import engine, serve_step  # noqa: F401
+"""Serving front door: shared queue/slot primitives plus the two engines —
+LM decode (``serve.engine.Engine``) and tiled segmentation
+(``repro.segserve.engine.SegEngine``, re-exported lazily as ``SegEngine``
+so importing one workload never pays for the other)."""
+from . import engine, queue, serve_step  # noqa: F401
+from .queue import FifoQueue, SlotTable  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "SegEngine":
+        from repro.segserve.engine import SegEngine
+
+        return SegEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import serve_step as ss
+from .queue import FifoQueue, SlotTable
 
 
 def lm_schedule_from_params(params, cfg, target_rel_err: float):
@@ -92,19 +93,13 @@ class Engine:
             self.cache = self.mod.init_state(cfg, batch, max_seq)
         else:
             self.cache = self.mod.init_state(cfg, batch)
-        self.slots: list[Request | None] = [None] * batch
+        self.slots: SlotTable[Request] = SlotTable(batch)
         self.lengths = np.zeros(batch, np.int32)
-
-    def _free_slot(self) -> int | None:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
 
     def admit(self, req: Request) -> bool:
         """Prefill a request into a free slot (per-slot prefill keeps the
         batch decode hot; a production engine would chunk prefills)."""
-        slot = self._free_slot()
+        slot = self.slots.free_index()
         if slot is None:
             return False
         # Prefill token-by-token through the decode path (slot-isolated);
@@ -117,47 +112,47 @@ class Engine:
                 self.extras,
             )
             self.lengths[slot] += 1
-        self.slots[slot] = req
+        occupied = self.slots.occupy(req)
+        assert occupied == slot
         req._last_logits = np.asarray(logits[slot, -1])  # type: ignore[attr-defined]
         return True
 
     def step(self) -> None:
         """One continuous-batching decode step for all active slots."""
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        active = self.slots.active()
         if not active:
             return
         toks = np.zeros((self.batch, 1), np.int32)
-        for i in active:
-            req = self.slots[i]
+        for i, req in active:
             last = getattr(req, "_last_logits")
             toks[i, 0] = int(np.argmax(last))
         # NOTE: per-slot cache_index differs; we decode with the max index and
         # rely on causal masking per-slot via positions.  For heterogeneous
         # lengths a production engine passes a per-slot index vector; here we
-        # step slots at equal length after admission (smoke-scale).
-        idx = int(max(self.lengths[i] for i in active))
+        # step slots at equal length after admission (smoke-scale).  The same
+        # approximation covers slot reuse: lengths and cache rows carry over
+        # from the previous occupant, so a refilled slot continues from its
+        # predecessor's position instead of 0 — fine for throughput smoke
+        # tests, wrong for content; the per-slot index vector fixes both.
+        idx = int(max(self.lengths[i] for i, _ in active))
         logits, self.cache = self.decode_fn(
             self.params, jnp.asarray(toks), self.cache, jnp.int32(idx),
             self.extras,
         )
-        for i in active:
-            req = self.slots[i]
+        for i, req in active:
             tok = int(np.argmax(np.asarray(logits[i, -1])))
             req.out.append(tok)
             req._last_logits = np.asarray(logits[i, -1])
             self.lengths[i] += 1
             if len(req.out) >= req.max_new or self.lengths[i] >= self.max_seq - 1:
                 req.done = True
-                self.slots[i] = None
+                self.slots.release(i)
 
     def run(self, requests: list[Request]) -> list[Request]:
-        pending = list(requests)
+        pending: FifoQueue[Request] = FifoQueue(requests)
         done: list[Request] = []
-        while pending or any(s is not None for s in self.slots):
-            while pending and self._free_slot() is not None:
-                if not self.admit(pending[0]):
-                    break
-                pending.pop(0)
+        while pending or self.slots.any_active():
+            pending.pump(self.slots, self.admit)
             self.step()
             for r in requests:
                 if r.done and r not in done:

@@ -1,0 +1,101 @@
+"""Shared serving primitives: FIFO admission queue + bounded slot table.
+
+Both engines — LM decode (``serve.engine.Engine``) and tiled segmentation
+(``repro.segserve.engine.SegEngine``) — run the same outer loop: requests
+wait in a FIFO, a bounded slot table caps how many are in flight, slots
+free as requests finish and are refilled from the queue.  What differs is
+the unit of batched work (one token per active sequence vs one micro-batch
+of image tiles); that stays in each engine.  This module is the common
+front door so a deployment can stack both behind one admission policy.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Generic, Iterable, TypeVar
+
+T = TypeVar("T")
+
+
+class SlotTable(Generic[T]):
+    """Fixed-capacity table of in-flight requests, addressed by slot index.
+
+    Slot indices are stable for a request's lifetime — LM decode keys KV
+    cache rows by them, segmentation keys stitching canvases by request —
+    so the table never compacts; it only occupies and releases.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity {capacity} < 1")
+        self._slots: list[T | None] = [None] * capacity
+
+    @property
+    def capacity(self) -> int:
+        return len(self._slots)
+
+    def __getitem__(self, idx: int) -> T | None:
+        return self._slots[idx]
+
+    def free_index(self) -> int | None:
+        """Lowest free slot index, or None when the table is full."""
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def occupy(self, item: T) -> int | None:
+        """Place ``item`` in the lowest free slot; None when full."""
+        idx = self.free_index()
+        if idx is not None:
+            self._slots[idx] = item
+        return idx
+
+    def release(self, idx: int) -> T:
+        """Free slot ``idx`` and return what occupied it."""
+        item = self._slots[idx]
+        if item is None:
+            raise KeyError(f"slot {idx} is already free")
+        self._slots[idx] = None
+        return item
+
+    def active(self) -> list[tuple[int, T]]:
+        """(slot, item) pairs of occupied slots, in slot order."""
+        return [(i, s) for i, s in enumerate(self._slots) if s is not None]
+
+    def any_active(self) -> bool:
+        return any(s is not None for s in self._slots)
+
+
+class FifoQueue(Generic[T]):
+    """Admission queue: requests wait here until a slot frees up."""
+
+    def __init__(self, items: Iterable[T] = ()):  # pragma: no branch
+        self._items: list[T] = list(items)
+
+    def push(self, item: T) -> None:
+        self._items.append(item)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def pump(
+        self,
+        slots: SlotTable[Any],
+        admit: Callable[[T], bool],
+    ) -> int:
+        """Admit queued requests in FIFO order while slots are free.
+
+        ``admit`` does the engine-specific work (prefill, tile planning) and
+        returns False to stop admission without consuming the request (e.g.
+        the engine wants the batch to drain first).  Returns how many
+        requests were admitted.
+        """
+        n = 0
+        while self._items and slots.free_index() is not None:
+            if not admit(self._items[0]):
+                break
+            self._items.pop(0)
+            n += 1
+        return n

@@ -1,0 +1,80 @@
+"""Shared serving primitives (serve.queue): the slot table and admission
+queue both engines — LM decode and tiled segmentation — are built on."""
+import pytest
+
+from repro.serve.queue import FifoQueue, SlotTable
+
+
+def test_slot_table_lifecycle():
+    t = SlotTable(2)
+    assert t.capacity == 2
+    assert not t.any_active()
+    assert t.free_index() == 0
+    assert t.occupy("a") == 0
+    assert t.occupy("b") == 1
+    assert t.occupy("c") is None  # full
+    assert t.free_index() is None
+    assert t.active() == [(0, "a"), (1, "b")]
+    assert t[0] == "a"
+    assert t.release(0) == "a"
+    assert t[0] is None
+    assert t.occupy("c") == 0  # lowest free slot is reused
+    assert t.active() == [(0, "c"), (1, "b")]
+
+
+def test_slot_table_errors():
+    with pytest.raises(ValueError):
+        SlotTable(0)
+    t = SlotTable(1)
+    with pytest.raises(KeyError):
+        t.release(0)
+
+
+def test_fifo_pump_admits_in_order_until_full():
+    q = FifoQueue(["r0", "r1", "r2"])
+    t = SlotTable(2)
+    admitted = []
+
+    def admit(item):
+        idx = t.occupy(item)
+        admitted.append((item, idx))
+        return idx is not None
+
+    assert q.pump(t, admit) == 2
+    assert admitted == [("r0", 0), ("r1", 1)]
+    assert len(q) == 1  # r2 still queued
+    t.release(0)
+    assert q.pump(t, admit) == 1
+    assert not q
+
+
+def test_fifo_pump_stops_on_admit_false():
+    q = FifoQueue(["r0", "r1"])
+    t = SlotTable(4)
+    assert q.pump(t, lambda item: False) == 0
+    assert len(q) == 2  # nothing consumed
+
+
+def test_lm_engine_runs_on_shared_primitives():
+    """The refactored LM engine still serves through a full queue cycle
+    (fast smoke of what test_system exercises at scale)."""
+    import jax
+    import numpy as np
+
+    from repro import models
+    from repro.configs import get_smoke_config
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_smoke_config("minitron_4b")
+    mod = models.build(cfg)
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, batch=2, max_seq=24)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=3), max_new=4)
+        for i in range(3)
+    ]
+    done = eng.run(reqs)
+    assert len(done) == 3
+    assert all(len(r.out) == 4 for r in done)
+    assert not eng.slots.any_active()
