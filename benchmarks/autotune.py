@@ -1,0 +1,201 @@
+"""Autotune frontier benchmark — ``BENCH_autotune.json``, the tracker's
+precision-frontier datapoint.
+
+For a sweep of error targets, three families of operating points on the
+same geometry and calibration images, all in one schema (shared with
+``benchmarks/precision_sweep.py``):
+
+  * ``frontier/*``     — the analytic whole-image ``from_weights`` frontier
+                         (``precision_sweep.frontier_rows``): what the
+                         weight-only bound *predicts* the trade to be;
+  * ``from_weights/*`` — that schedule actually *served* (PR-2 operating
+                         point: fixed tile, octave-heuristic adaptivity)
+                         with its measured end-to-end error — the baseline
+                         the autotuner must dominate;
+  * ``tuned/*``        — :func:`repro.autotune.tune_unet` plans (measured
+                         sensitivities, calibrated classes, searched tile)
+                         served through the engine, with the certified
+                         bound next to the measured error.
+
+The dominance gate (raises, so CI fails loudly): at the headline target the
+tuned plan must cost fewer modeled cycles than the served ``from_weights``
+baseline at equal-or-lower measured error, and its certificate must hold.
+
+    PYTHONPATH=src python -m benchmarks.run --section autotune
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from benchmarks.segserve import GEOMETRY, IMAGE_HW, TILE
+
+TARGETS = (0.1, 0.05, 0.02)
+HEADLINE_TARGET = 0.05
+
+
+def run(
+    *,
+    base: int | None = None,
+    image_hw: tuple[int, int] = IMAGE_HW,
+    tile_baseline: int = TILE,
+    targets: tuple[float, ...] = TARGETS,
+    headline: float = HEADLINE_TARGET,
+    json_path: str | None = "BENCH_autotune.json",
+    n_calib: int = 2,
+) -> list[tuple[str, float, str]]:
+    import jax
+
+    from benchmarks import precision_sweep
+    from repro import autotune
+    from repro.models import unet as unet_mod
+    from repro.segserve import SegEngine
+    from repro.segserve.synth import phantom_image
+
+    geo = dict(GEOMETRY)
+    if base is not None:
+        geo["base"] = base
+    cfg = unet_mod.UNetConfig(
+        hw=image_hw[0], in_ch=geo["in_ch"], base=geo["base"],
+        depth=geo["depth"], convs_per_stage=1, n_classes=geo["n_classes"],
+        quant_mode="mma_int8", impl="xla",
+    )
+    params = unet_mod.init_params(jax.random.PRNGKey(0), cfg)
+    image = phantom_image(*image_hw, geo["in_ch"])
+    calib_images = [
+        phantom_image(*image_hw, geo["in_ch"], seed=s) for s in range(n_calib)
+    ]
+    calibration = autotune.calibrate_unet(params, cfg, calib_images)
+    rel_err = autotune.rel_err  # the subsystem's one error metric
+
+    payload_rows: list[dict] = []
+    csv_rows: list[tuple[str, float, str]] = []
+
+    def emit(kind, name, res, *, rel, cert=None, tile=None, planes=None,
+             target=None, wall_us=None, extra=""):
+        payload_rows.append(dict(
+            kind=kind, name=name, target_rel_err=target,
+            cycles=res.cycles, ops=res.ops, n_tiles=res.n_tiles,
+            time_ms=res.time_ms, gops=res.gops, gops_w=res.gops_per_w,
+            energy_mj=res.energy_mj, rel_err=rel, cert=cert,
+            tile=tile, planes=None if planes is None else list(planes),
+            wall_us=wall_us,
+        ))
+        csv_rows.append((
+            f"autotune/{name}", res.time_ms * 1e3,
+            f"cycles={res.cycles};gops_w={res.gops_per_w:.2f};"
+            f"rel_err={rel:.4g}"
+            + (f";cert={cert:.4g}" if cert is not None else "") + extra,
+        ))
+
+    # ---- analytic whole-image frontier (shared schema) ------------------
+    frontier = precision_sweep.frontier_rows(
+        params, cfg, (None,) + tuple(targets),
+        x=None,
+    )
+    for r in frontier:
+        payload_rows.append(dict(r, kind="frontier", name=f"frontier/{r['name']}"))
+
+    # ---- served baseline: from_weights @ fixed tile (PR-2 ship) ---------
+    ref_classic = SegEngine(
+        dataclasses.replace(cfg, plane_schedule=None, planes=8), params,
+        tile=tile_baseline, batch=4, adaptive=False,
+    ).run([image])[0]
+    baselines: dict[float, dict] = {}
+    for tgt in targets:
+        sched = unet_mod.schedule_from_params(params, tgt)
+        scfg = dataclasses.replace(cfg, plane_schedule=tuple(sched.planes))
+        res = SegEngine(
+            scfg, params, tile=tile_baseline, batch=4, adaptive=True
+        ).run([image])[0]
+        rel = rel_err(res.logits, ref_classic.logits)
+        baselines[tgt] = dict(cycles=res.cycles, rel_err=rel)
+        emit("from_weights", f"from_weights-{tgt:g}", res, rel=rel,
+             tile=tile_baseline, planes=sched.planes, target=tgt)
+
+    # ---- tuned plans ----------------------------------------------------
+    tuned: dict[float, dict] = {}
+    for tgt in targets:
+        t0 = time.perf_counter()
+        plan = autotune.tune_unet(
+            params, cfg, calib_images, target_rel_err=tgt,
+            calibration=calibration, sound_bound=(tgt == headline),
+        )
+        wall = (time.perf_counter() - t0) * 1e6
+        res = autotune.engine_from_plan(cfg, params, plan).run([image])[0]
+        ref = autotune.engine_from_plan(
+            cfg, params, autotune.reference_plan(plan)
+        ).run([image])[0]
+        rel = rel_err(res.logits, ref.logits)
+        cert = float(plan.certificate["cert"])
+        tuned[tgt] = dict(cycles=res.cycles, rel_err=rel, cert=cert,
+                          plan=plan.to_json())
+        emit("tuned", f"tuned-{tgt:g}", res, rel=rel, cert=cert,
+             tile=plan.tile, planes=plan.planes, target=tgt, wall_us=wall,
+             extra=f";tile={plan.tile}")
+        if rel > cert:
+            raise RuntimeError(
+                f"certificate violated at target {tgt:g}: measured "
+                f"{rel:.4g} > cert {cert:.4g}"
+            )
+        if cert > tgt:
+            raise RuntimeError(
+                f"tuned plan missed its budget at target {tgt:g}: "
+                f"cert {cert:.4g} > target"
+            )
+
+    # ---- the dominance gate --------------------------------------------
+    tb, bb = tuned[headline], baselines[headline]
+    dominates = tb["cycles"] < bb["cycles"] and tb["rel_err"] <= bb["rel_err"]
+    if not dominates:
+        raise RuntimeError(
+            f"tuned plan does not dominate from_weights at target "
+            f"{headline:g}: tuned (cycles={tb['cycles']}, "
+            f"rel_err={tb['rel_err']:.4g}) vs baseline "
+            f"(cycles={bb['cycles']}, rel_err={bb['rel_err']:.4g})"
+        )
+
+    if json_path:
+        payload = dict(
+            bench="autotune",
+            geometry=dict(geo, image_h=image_hw[0], image_w=image_hw[1],
+                          tile_baseline=tile_baseline),
+            targets=list(targets),
+            headline_target=headline,
+            calibration=dict(
+                fingerprint=calibration.fingerprint,
+                n_images=calibration.n_images,
+                thresholds=list(calibration.class_thresholds),
+                octave_hist=list(calibration.octave_hist),
+                layer_gain=list(calibration.layer_gain),
+            ),
+            rows=payload_rows,
+            dominance=dict(
+                target=headline,
+                tuned_cycles=tb["cycles"],
+                from_weights_cycles=bb["cycles"],
+                tuned_rel_err=tb["rel_err"],
+                from_weights_rel_err=bb["rel_err"],
+                speedup=bb["cycles"] / tb["cycles"],
+                holds=dominates,
+            ),
+        )
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return csv_rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="calibrated base-48 width (slow on CPU)")
+    ap.add_argument("--json", default="BENCH_autotune.json")
+    args = ap.parse_args()
+    for name, us, derived in run(
+        base=48 if args.full else None, json_path=args.json
+    ):
+        print(f"{name},{us:.1f},{derived}")

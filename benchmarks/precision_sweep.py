@@ -28,27 +28,32 @@ from repro.core import cycle_model as cm
 TARGETS = (None, 0.05, 0.02, 0.01, 0.005, 0.001)
 
 
-def run(targets=TARGETS, *, hw: int | None = None) -> list[tuple[str, float, str]]:
+def frontier_rows(params, cfg, targets=TARGETS, *, x=None) -> list[dict]:
+    """Structured frontier datapoints (the tracker schema shared with
+    ``BENCH_autotune.json``): one dict per error target with the per-layer
+    schedule, relation-(2) account and measured whole-image error.  ``cfg``
+    must be a quantized ``UNetConfig``; ``x`` defaults to a fixed-PRNG
+    normal input at the config geometry."""
     from repro.models import unet as unet_mod
 
-    cfg = unet_mod.UNetConfig(quant_mode="mma_int8", impl="xla")
-    if hw is not None:
-        cfg = dataclasses.replace(cfg, hw=hw)
     layers = cfg.conv_layers()
-    params = unet_mod.init_params(jax.random.PRNGKey(0), cfg)
-    x = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.hw, cfg.hw, cfg.in_ch))
-
+    if x is None:
+        x = jax.random.normal(
+            jax.random.PRNGKey(1), (1, cfg.hw, cfg.hw, cfg.in_ch)
+        )
     power = cm.PAPER_TABLE1["proposed"]["gops"] / cm.PAPER_TABLE1["proposed"]["gops_w"]
     ops = cm.model_ops(layers)
 
     rows = []
     for tgt in targets:
         if tgt is None:
-            sched = cfg.schedule()  # uniform 8
-            name = "precision/full-8"
+            sched = dataclasses.replace(
+                cfg, plane_schedule=None
+            ).schedule()  # uniform 8
+            name = "full-8"
         else:
             sched = unet_mod.schedule_from_params(params, tgt)
-            name = f"precision/target-{tgt:g}"
+            name = f"target-{tgt:g}"
         cyc = cm.schedule_cycles(layers, sched)
         t_ms = cyc / cm.FREQ_HZ * 1e3
         gops = ops / (t_ms * 1e-3) / 1e9
@@ -56,15 +61,43 @@ def run(targets=TARGETS, *, hw: int | None = None) -> list[tuple[str, float, str
         out_s, out_f, adv = unet_mod.forward_with_error_bound(params, x, scfg)
         emp = float(jnp.max(jnp.abs(out_s - out_f))
                     / jnp.maximum(jnp.max(jnp.abs(out_f)), 1e-8))
+        rows.append(dict(
+            name=name,
+            target_rel_err=tgt,
+            planes=list(sched.planes),
+            kept=sched.arithmetic_fraction(),
+            cycles=cyc,
+            ops=ops,
+            time_ms=t_ms,
+            gops=gops,
+            gops_w=gops / power,
+            energy_mj=power * t_ms,
+            layer_bound=sched.rel_err_bound(),
+            sound_bound=float(adv),
+            rel_err=emp,
+        ))
+    return rows
+
+
+def run(targets=TARGETS, *, hw: int | None = None) -> list[tuple[str, float, str]]:
+    from repro.models import unet as unet_mod
+
+    cfg = unet_mod.UNetConfig(quant_mode="mma_int8", impl="xla")
+    if hw is not None:
+        cfg = dataclasses.replace(cfg, hw=hw)
+    params = unet_mod.init_params(jax.random.PRNGKey(0), cfg)
+
+    rows = []
+    for r in frontier_rows(params, cfg, targets):
         rows.append((
-            name,
-            t_ms * 1e3,
-            f"planes={'/'.join(map(str, sched.planes))};"
-            f"kept={sched.arithmetic_fraction():.3f};"
-            f"gops={gops:.2f};gops_w={gops / power:.2f};"
-            f"e_mj={power * t_ms:.1f};"
-            f"layer_bound={sched.rel_err_bound():.4g};"
-            f"rel_err={emp:.4g}",
+            f"precision/{r['name']}",
+            r["time_ms"] * 1e3,
+            f"planes={'/'.join(map(str, r['planes']))};"
+            f"kept={r['kept']:.3f};"
+            f"gops={r['gops']:.2f};gops_w={r['gops_w']:.2f};"
+            f"e_mj={r['energy_mj']:.1f};"
+            f"layer_bound={r['layer_bound']:.4g};"
+            f"rel_err={r['rel_err']:.4g}",
         ))
     return rows
 

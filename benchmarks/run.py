@@ -1,10 +1,11 @@
 """Benchmark harness — one section per paper table/claim.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--section table1|kernels|roofline|msdf|precision|segserve]
+        [--section table1|kernels|roofline|msdf|precision|segserve|autotune]
 
-Prints ``name,us_per_call,derived`` CSV rows.  The segserve section also
-writes machine-readable ``BENCH_segserve.json`` for the bench tracker.
+Prints ``name,us_per_call,derived`` CSV rows.  The segserve and autotune
+sections also write machine-readable ``BENCH_segserve.json`` /
+``BENCH_autotune.json`` for the bench tracker.
 """
 from __future__ import annotations
 
@@ -70,6 +71,10 @@ def main() -> None:
         from benchmarks import segserve
 
         rows += segserve.run()
+    if args.section in ("all", "autotune"):
+        from benchmarks import autotune
+
+        rows += autotune.run()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

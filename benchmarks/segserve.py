@@ -4,15 +4,23 @@ precision, the bench the tracker ingests (``BENCH_segserve.json``).
 A synthetic medical-style image (quiet background + a bright structure)
 is served three ways through :class:`repro.segserve.SegEngine`:
 
-  * ``full-8``   — every tile at full 8-plane precision (baseline);
-  * ``uniform``  — the certified per-layer schedule, same for every tile;
-  * ``adaptive`` — the same layer schedule refined per tile budget class
-                   (flat background tiles consume fewer MSB digits).
+  * ``full-8``   — every tile at full 8-plane precision, at the *tuned*
+                   tile geometry with per-tile quantization (the reference
+                   the tuned certificate is defined against);
+  * ``uniform``  — the analytic ``from_weights`` per-layer schedule at the
+                   legacy fixed tile (the PR-2 operating point, kept as the
+                   baseline the autotuner must dominate);
+  * ``adaptive`` — a certified :class:`repro.autotune.TunedPlan`: measured
+                   per-layer budgets, calibrated budget-class thresholds,
+                   tile size from the cycle-model search.
 
 Reported per row: relation-(2) cycles, modeled time, GOPS, GOPS/W and
 energy at the paper's implied accelerator power, plus the measured max
-relative error against the full-8 run.  The headline the tracker watches:
-``adaptive`` cycles < ``uniform`` cycles at the same certified target.
+relative error against the full-8 run.  The tuned row also reports its
+certified bound; the bench **fails** (raises, exits non-zero) if the
+measured error exceeds the certificate or the certificate exceeds the
+target — that is the CI gate on the autotuner's promise, and it replaces
+the old silent target miss (0.356 measured against a 0.05 target).
 
     PYTHONPATH=src python -m benchmarks.run --section segserve
 """
@@ -22,8 +30,6 @@ import dataclasses
 import json
 import time
 
-import numpy as np
-
 # Small-but-real default geometry: calibrated depth, reduced width so the
 # CI smoke stays fast.  --full in __main__ runs the calibrated base.  The
 # canvas is large relative to the halo (24 px at depth 3) so background
@@ -31,7 +37,7 @@ import numpy as np
 # case the bench exists to price.
 GEOMETRY = dict(depth=3, base=16, in_ch=4, n_classes=4)
 IMAGE_HW = (160, 128)
-TILE = 32
+TILE = 32  # legacy fixed tile of the uniform baseline
 TARGET_REL_ERR = 0.05
 
 
@@ -42,9 +48,11 @@ def run(
     tile: int = TILE,
     target_rel_err: float = TARGET_REL_ERR,
     json_path: str | None = "BENCH_segserve.json",
+    n_calib: int = 2,
 ) -> list[tuple[str, float, str]]:
     import jax
 
+    from repro import autotune
     from repro.models import unet as unet_mod
     from repro.segserve import SegEngine
     from repro.segserve.synth import phantom_image
@@ -61,27 +69,48 @@ def run(
     sched = unet_mod.schedule_from_params(params, target_rel_err)
     scfg = dataclasses.replace(cfg, plane_schedule=tuple(sched.planes))
     image = phantom_image(*image_hw, geo["in_ch"])
+    # calibration set: the served image's distribution, served image first
+    calib_images = [
+        phantom_image(*image_hw, geo["in_ch"], seed=s) for s in range(n_calib)
+    ]
+
+    t0 = time.perf_counter()
+    plan = autotune.tune_unet(
+        params, cfg, calib_images, target_rel_err=target_rel_err
+    )
+    tune_us = (time.perf_counter() - t0) * 1e6
+
+    def timed(make_engine):
+        eng = make_engine()
+        t0 = time.perf_counter()
+        res = eng.run([image])[0]
+        return res, (time.perf_counter() - t0) * 1e6
+
+    res_full, wall_full = timed(
+        lambda: autotune.engine_from_plan(
+            cfg, params, autotune.reference_plan(plan)
+        )
+    )
+    res_uni, wall_uni = timed(
+        lambda: SegEngine(scfg, params, tile=tile, batch=4, adaptive=False)
+    )
+    res_ad, wall_ad = timed(
+        lambda: autotune.engine_from_plan(cfg, params, plan)
+    )
 
     variants = [
-        ("full-8", cfg, False),
-        ("uniform", scfg, False),
-        ("adaptive", scfg, True),
+        ("full-8", res_full, wall_full),
+        ("uniform", res_uni, wall_uni),
+        ("adaptive", res_ad, wall_ad),
     ]
-    results = {}
-    wall_us = {}
-    for name, vcfg, adapt in variants:
-        eng = SegEngine(vcfg, params, tile=tile, batch=4, adaptive=adapt)
-        t0 = time.perf_counter()
-        results[name] = eng.run([image])[0]
-        wall_us[name] = (time.perf_counter() - t0) * 1e6
+    ref = res_full.logits
+    cert = float(plan.certificate["cert"])
 
-    ref = results["full-8"].logits
-    denom = max(float(np.max(np.abs(ref))), 1e-8)
     rows = []
     payload_rows = []
-    for name, _, _ in variants:
-        r = results[name]
-        rel_err = float(np.max(np.abs(r.logits - ref))) / denom
+    for name, r, wall_us in variants:
+        rel_err = autotune.rel_err(r.logits, ref)
+        certified = cert if name == "adaptive" else None
         rows.append(
             (
                 f"segserve/{name}",
@@ -89,7 +118,8 @@ def run(
                 f"cycles={r.cycles};tiles={r.n_tiles};"
                 f"classes={'/'.join(f'{k}:{v}' for k, v in r.class_counts.items())};"
                 f"gops={r.gops:.2f};gops_w={r.gops_per_w:.2f};"
-                f"e_mj={r.energy_mj:.1f};rel_err={rel_err:.4g}",
+                f"e_mj={r.energy_mj:.1f};rel_err={rel_err:.4g}"
+                + (f";cert={certified:.4g}" if certified is not None else ""),
             )
         )
         payload_rows.append(
@@ -104,8 +134,25 @@ def run(
                 gops_w=r.gops_per_w,
                 energy_mj=r.energy_mj,
                 rel_err=rel_err,
-                wall_us=wall_us[name],
+                cert=certified,
+                wall_us=wall_us,
             )
+        )
+
+    by_name = {row["name"]: row for row in payload_rows}
+    measured_ad = by_name["adaptive"]["rel_err"]
+    # The CI gate (satellite): certified means *checked*.  A silent target
+    # miss — the old behavior — must now fail the bench loudly.
+    if measured_ad > cert:
+        raise RuntimeError(
+            f"certificate violated: adaptive measured rel_err {measured_ad:.4g}"
+            f" > certified bound {cert:.4g} "
+            f"(fingerprint {plan.fingerprint[:12]})"
+        )
+    if cert > target_rel_err:
+        raise RuntimeError(
+            f"certified bound {cert:.4g} exceeds target {target_rel_err:g} — "
+            f"the tuned plan failed to meet the error budget"
         )
 
     if json_path:
@@ -115,9 +162,17 @@ def run(
                           tile=tile, halo=_halo(geo["depth"])),
             target_rel_err=target_rel_err,
             schedule=list(sched.planes),
+            plan=plan.to_json(),
+            tune_wall_us=tune_us,
             rows=payload_rows,
             adaptive_speedup_vs_uniform=(
-                results["uniform"].cycles / results["adaptive"].cycles
+                res_uni.cycles / res_ad.cycles
+            ),
+            gate=dict(
+                measured=measured_ad,
+                cert=cert,
+                target=target_rel_err,
+                holds=bool(measured_ad <= cert <= target_rel_err),
             ),
         )
         with open(json_path, "w") as f:

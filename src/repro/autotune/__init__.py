@@ -1,0 +1,36 @@
+"""Calibrated, certified precision/tile planning (the autotune subsystem).
+
+Turns (model, validation batch, error budget, geometry) into a serialized
+:class:`TunedPlan` that makes every precision/geometry knob in the stack
+self-configuring:
+
+``calibrate`` — instrumented forwards: per-layer activation amplitudes and
+               octave histograms, measured per-tile ratio gains (replacing
+               the "first-conv ratio holds at every depth" heuristic), the
+               single-layer truncation sensitivity table, and the per-tile
+               extension of the sound interval certificate;
+``search``    — greedy cycles-per-error descent over per-layer plane
+               budgets + tile-size search, both minimizing relation-(2)
+               cycles subject to the measured error budget;
+``plan``      — the :class:`TunedPlan` artifact (schedule, tile/halo,
+               calibrated class thresholds, two-tier certificate,
+               calibration fingerprint) with atomic JSON round-trip;
+``api``       — :func:`tune_unet` / :func:`tune_lm` and the wiring into
+               ``UNetConfig``, ``SegEngine`` and the LM serving config.
+"""
+from . import api, calibrate, plan, search  # noqa: F401
+from .api import (  # noqa: F401
+    apply_plan,
+    apply_plan_lm,
+    engine_from_plan,
+    reference_plan,
+    tune_lm,
+    tune_unet,
+)
+from .calibrate import (  # noqa: F401
+    Calibration,
+    calibrate_unet,
+    rel_err,
+    tiled_sound_bound,
+)
+from .plan import TunedPlan  # noqa: F401

@@ -1,0 +1,317 @@
+"""Calibration: measured activation statistics the search derives budgets from.
+
+The per-layer schedule of PR 1 is chosen from an analytic *weight-only*
+bound, and the per-tile refinement of PR 2 assumes the input-window
+amplitude ratio holds at every depth ("exact at the first conv, heuristic
+deeper" — ROADMAP).  MINT and DSLR-CNN both derive digit budgets from
+*measured activation statistics*; this module measures them:
+
+  * **per-layer amplitude** — instrumented full-precision forwards over a
+    validation set record each conv's post-ReLU abs-max (``unet.forward``'s
+    ``taps`` hook), per whole canvas and per halo tile window;
+  * **per-layer tile ratios** — how a tile's amplitude at depth ``l``
+    relates to its *input* ratio: the measured gain table replaces the
+    deeper-layer heuristic, and per-class direct maxima catch the bias
+    floor of flat windows;
+  * **octave histogram → calibrated thresholds** — budget-class boundaries
+    come from the amplitude octaves the data actually occupies (empty
+    octaves collapse, so the serving engine compiles fewer class
+    signatures);
+  * **per-layer sensitivity** — measured end-to-end relative error of
+    truncating exactly one layer to each budget, swept in a *single
+    compilation* via the traced ``planes_arr`` hook (the budgets ride in as
+    data through the exact bit-mask identity);
+  * **sound per-tile certificate** — :func:`tiled_sound_bound` extends the
+    interval machinery of ``unet.forward_with_error_bound`` to a tiled,
+    class-refined deployment: worst-case interval propagation per tile
+    window at its refined schedule, normalized by the whole-canvas
+    full-precision amplitude.
+
+Everything is deterministic given (params, images, knobs); the
+``fingerprint`` binds a downstream :class:`~repro.autotune.plan.TunedPlan`
+to exactly those inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitplane import N_BITS
+from repro.models import unet
+from repro.segserve import tiling
+from repro.segserve.adaptive import (
+    amplitude_ratio,
+    budget_class,
+    budget_class_from_thresholds,
+)
+
+# Ratios below this floor contribute to per-class direct maxima but not to
+# the gain table: gain = ratio_l / ratio_in diverges as ratio_in -> 0, and
+# flat windows are governed by their measured bias floor instead.
+GAIN_FLOOR = 2.0**-12
+
+
+def fingerprint(params, images, **knobs) -> str:
+    """SHA-256 over the exact weights, calibration inputs and knobs a plan
+    was derived from — byte-level, so any drift invalidates the plan."""
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        a = np.asarray(leaf)
+        h.update(str((a.shape, str(a.dtype))).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    for im in images:
+        a = np.asarray(im)
+        h.update(str((a.shape, str(a.dtype))).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    h.update(repr(sorted((k, repr(v)) for k, v in knobs.items())).encode())
+    return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """Measured statistics of one (params, validation set, geometry) triple.
+
+    ``sensitivity[l][b-1]`` is the measured end-to-end relative error of the
+    whole-canvas forward with *only* layer ``l`` truncated to ``b`` planes
+    (max over the calibration images; ``sensitivity[l][7] == 0`` by
+    construction).  ``class_ratios[c][l]`` is the calibrated per-layer
+    amplitude-ratio bound for threshold class ``c`` —
+    ``min(1, max(measured direct max, threshold * layer_gain))`` — the
+    ratio :meth:`repro.core.PlaneSchedule.refine` consumes per class.
+    """
+
+    fingerprint: str
+    n_images: int
+    tile: int
+    max_class: int
+    layer_amax: tuple[float, ...]
+    layer_gain: tuple[float, ...]
+    sensitivity: tuple[tuple[float, ...], ...]
+    octave_hist: tuple[int, ...]
+    class_thresholds: tuple[float, ...]
+    class_ratios: tuple[tuple[float, ...], ...]
+    class_counts: tuple[int, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_amax)
+
+
+def _require_quant(cfg: unet.UNetConfig) -> None:
+    if cfg.quant_mode != "mma_int8":
+        raise ValueError(
+            "autotune calibrates the digit-serial datapath; pass a "
+            "UNetConfig with quant_mode='mma_int8' (the float path has no "
+            "plane budgets to tune)"
+        )
+
+
+def _full8(cfg: unet.UNetConfig) -> unet.UNetConfig:
+    return dataclasses.replace(cfg, plane_schedule=None, planes=8)
+
+
+def rel_err(out, ref) -> float:
+    """The one error metric of the subsystem: max |out - ref| over a
+    guarded max |ref| — shared by calibration, certification and the
+    benches so the certificate and the gate can never drift apart."""
+    denom = max(float(jnp.max(jnp.abs(ref))), 1e-8)
+    return float(jnp.max(jnp.abs(jnp.asarray(out) - jnp.asarray(ref)))) / denom
+
+
+_rel_err = rel_err
+
+
+@functools.lru_cache(maxsize=32)
+def _planes_forward(full_cfg: unet.UNetConfig):
+    """Process-wide jitted schedule-sweep forward (one compile per geometry
+    x window shape; candidate budgets are traced data) — the calibration
+    sensitivity sweep and the search's validation loop share it."""
+    return jax.jit(
+        lambda p, x, arr: unet.forward(p, x, full_cfg, planes_arr=arr)
+    )
+
+
+def calibrate_unet(
+    params,
+    cfg: unet.UNetConfig,
+    images,
+    *,
+    tile: int | None = None,
+    max_class: int = 6,
+    budgets: tuple[int, ...] = (7, 6, 5, 4, 3, 2, 1),
+) -> Calibration:
+    """Instrumented calibration pass over ``images`` (each (H, W, Cin)).
+
+    ``tile`` is the stats tiling (defaults to the geometry's minimum viable
+    tile); the measured ratio/gain tables generalize across nearby tile
+    sizes and the tile-size search re-prices geometry analytically.
+    """
+    _require_quant(cfg)
+    if not images:
+        raise ValueError("calibration needs at least one image")
+    full_cfg = _full8(cfg)
+    if tile is None:
+        tile = cfg.min_viable_tile()
+    else:
+        cfg.validate_tile(tile)
+    n_layers = len(cfg.conv_layers())
+
+    # one jitted taps forward per window shape (windows share few shapes)
+    def _taps_forward(p, x):
+        taps: list = []
+        out = unet.forward(p, x, full_cfg, taps=taps)
+        return out, tuple(jnp.max(jnp.abs(t)) for t in taps)
+
+    taps_fwd = jax.jit(_taps_forward)
+
+    # one compilation serves every sensitivity schedule (traced planes_arr)
+    planes_fwd = _planes_forward(full_cfg)
+
+    layer_amax = np.zeros(n_layers)
+    octave_hist = np.zeros(max_class + 1, np.int64)
+    # raw per-tile records: (input ratio, per-layer ratios)
+    tile_records: list[tuple[float, np.ndarray]] = []
+    sens = np.zeros((n_layers, N_BITS))
+
+    for image in images:
+        image = np.asarray(image, np.float32)
+        plan = tiling.plan_tiles(
+            image.shape[0], image.shape[1], depth=cfg.depth,
+            convs_per_stage=cfg.convs_per_stage, tile=tile,
+        )
+        canvas = tiling.pad_canvas(image, plan)
+        x = jnp.asarray(canvas[None])
+        _, canvas_taps = taps_fwd(params, x)
+        canvas_taps = np.asarray([float(t) for t in canvas_taps])
+        layer_amax = np.maximum(layer_amax, canvas_taps)
+        canvas_amax = float(np.max(np.abs(canvas)))
+
+        for spec in plan.tiles:
+            win = canvas[spec.y0 : spec.y1, spec.x0 : spec.x1]
+            r_in = amplitude_ratio(win, canvas_amax)
+            octave_hist[budget_class(r_in, max_class=max_class)] += 1
+            _, win_taps = taps_fwd(params, jnp.asarray(win[None]))
+            ratios = np.asarray([float(t) for t in win_taps]) / np.maximum(
+                canvas_taps, 1e-12
+            )
+            tile_records.append((r_in, np.minimum(ratios, 1.0)))
+
+        # per-layer sensitivity sweep, one executable
+        ref = planes_fwd(params, x, jnp.full((n_layers,), 8, jnp.int32))
+        for l in range(n_layers):
+            for b in budgets:
+                arr = np.full((n_layers,), 8, np.int32)
+                arr[l] = b
+                out = planes_fwd(params, x, jnp.asarray(arr))
+                sens[l, b - 1] = max(sens[l, b - 1], _rel_err(out, ref))
+
+    # ---- calibrated thresholds: collapse unoccupied amplitude octaves ----
+    occupied = sorted({0} | {k for k in range(max_class + 1) if octave_hist[k]})
+    thresholds = tuple(2.0**-k if k else 1.0 for k in occupied)
+
+    # ---- measured gain table + per-class direct maxima ------------------
+    gains = np.ones(n_layers)
+    direct = np.zeros((len(thresholds), n_layers))
+    counts = np.zeros(len(thresholds), np.int64)
+    for r_in, ratios in tile_records:
+        if r_in >= GAIN_FLOOR:
+            gains = np.maximum(gains, ratios / r_in)
+        c = budget_class_from_thresholds(r_in, thresholds)
+        counts[c] += 1
+        direct[c] = np.maximum(direct[c], ratios)
+
+    class_ratios = []
+    for c, t in enumerate(thresholds):
+        rho = np.minimum(1.0, np.maximum(direct[c], t * gains))
+        class_ratios.append(tuple(float(v) for v in rho))
+
+    return Calibration(
+        fingerprint=fingerprint(
+            params, images, cfg=repr(cfg), tile=tile, max_class=max_class,
+            budgets=budgets,
+        ),
+        n_images=len(images),
+        tile=tile,
+        max_class=max_class,
+        layer_amax=tuple(float(v) for v in layer_amax),
+        layer_gain=tuple(float(v) for v in gains),
+        sensitivity=tuple(tuple(float(v) for v in row) for row in sens),
+        octave_hist=tuple(int(v) for v in octave_hist),
+        class_thresholds=thresholds,
+        class_ratios=tuple(class_ratios),
+        class_counts=tuple(int(v) for v in counts),
+    )
+
+
+def make_rel_err_validator(params, cfg: unet.UNetConfig, images):
+    """``validate(planes) -> measured rel err`` (whole-canvas, vs the full
+    8-plane datapath, max over ``images``) — the search's fast validator.
+    The per-image full-8 references depend only on (params, images), so they
+    are computed once here and every candidate schedule pays a single
+    forward per image (one compilation; budgets ride in as data)."""
+    _require_quant(cfg)
+    fwd = _planes_forward(_full8(cfg))
+    n_layers = len(cfg.conv_layers())
+    xs, refs = [], []
+    for image in images:
+        image = np.asarray(image, np.float32)
+        plan = tiling.plan_tiles(
+            image.shape[0], image.shape[1], depth=cfg.depth,
+            convs_per_stage=cfg.convs_per_stage, tile=cfg.min_viable_tile(),
+        )
+        x = jnp.asarray(tiling.pad_canvas(image, plan)[None])
+        xs.append(x)
+        refs.append(fwd(params, x, jnp.full((n_layers,), 8, jnp.int32)))
+
+    def validate(planes) -> float:
+        arr = jnp.asarray(np.asarray(planes, np.int32))
+        if arr.shape != (n_layers,):
+            raise ValueError(f"schedule shape {arr.shape} != ({n_layers},)")
+        return max(
+            _rel_err(fwd(params, x, arr), ref) for x, ref in zip(xs, refs)
+        )
+
+    return validate
+
+
+def measured_rel_err(params, cfg: unet.UNetConfig, images, planes) -> float:
+    """One-shot form of :func:`make_rel_err_validator`."""
+    return make_rel_err_validator(params, cfg, images)(planes)
+
+
+def tiled_sound_bound(params, cfg: unet.UNetConfig, image, plan) -> float:
+    """Worst-case *sound* bound for a tiled, class-refined deployment of
+    ``plan`` on ``image``: the interval machinery of
+    ``unet.forward_with_error_bound`` run per tile window at the window's
+    refined schedule, abs bounds taken against the whole-canvas
+    full-precision amplitude.  Unconditionally sound for the per-tile-
+    quantized serving path — and honestly loose: op-norm propagation
+    compounds worst cases the measured certificate does not."""
+    _require_quant(cfg)
+    image = np.asarray(image, np.float32)
+    tplan = tiling.plan_tiles(
+        image.shape[0], image.shape[1], depth=cfg.depth,
+        convs_per_stage=cfg.convs_per_stage, tile=plan.tile, halo=plan.halo,
+    )
+    canvas = tiling.pad_canvas(image, tplan)
+    canvas_amax = float(np.max(np.abs(canvas)))
+    out_full = unet.forward(params, jnp.asarray(canvas[None]), _full8(cfg))
+    denom = max(float(jnp.max(jnp.abs(out_full))), 1e-8)
+    worst_abs = 0.0
+    for spec in tplan.tiles:
+        win = canvas[spec.y0 : spec.y1, spec.x0 : spec.x1]
+        k = plan.classify(amplitude_ratio(win, canvas_amax))
+        ccfg = dataclasses.replace(
+            cfg, plane_schedule=tuple(plan.class_schedule(k)), planes=8
+        )
+        _, out_f, rel = unet.forward_with_error_bound(
+            params, jnp.asarray(win[None]), ccfg
+        )
+        worst_abs = max(worst_abs, rel * float(jnp.max(jnp.abs(out_f))))
+    return worst_abs / denom

@@ -1,1 +1,2 @@
 from . import ckpt  # noqa: F401
+from .ckpt import Checkpointer, load_json, save_json_atomic  # noqa: F401

@@ -37,6 +37,25 @@ import numpy as np
 _RAW_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
 
 
+def save_json_atomic(path: str | os.PathLike, obj) -> Path:
+    """Write a JSON document with the same crash-safety discipline as a
+    checkpoint step: serialize to ``<path>.tmp`` first, fsync-free rename
+    last, so a reader never sees a torn file.  Used for small sidecar
+    artifacts (``repro.autotune.TunedPlan``, bench payloads) that must be
+    restorable next to the weights they describe."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(obj, indent=2, sort_keys=True) + "\n")
+    os.rename(tmp, path)
+    return path
+
+
+def load_json(path: str | os.PathLike):
+    """Read a document written by :func:`save_json_atomic`."""
+    return json.loads(Path(path).read_text())
+
+
 def _to_storable(a: np.ndarray) -> tuple[np.ndarray, str]:
     a = np.asarray(a)
     if a.dtype.kind in "biufc":

@@ -23,6 +23,7 @@ consistency.
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field
 
@@ -203,6 +204,31 @@ def schedule_cycles(
     layers: list[ConvLayerSpec], schedule, *, mode: str = "pipelined"
 ) -> int:
     return sum(schedule_layer_cycles(layers, schedule, mode=mode))
+
+
+@functools.lru_cache(maxsize=65536)
+def _unet_window_cycles_cached(
+    hw: tuple[int, int], in_ch: int, base: int, depth: int,
+    convs_per_stage: int, planes: tuple[int, ...], mode: str,
+) -> int:
+    layers = unet_conv_layers(hw, in_ch, base, depth, convs_per_stage)
+    return schedule_cycles(layers, planes, mode=mode)
+
+
+def unet_window_cycles(
+    hw: int | tuple[int, int], in_ch: int, base: int, depth: int,
+    convs_per_stage: int, schedule, *, mode: str = "pipelined",
+) -> int:
+    """Relation-(2) cycles of one U-Net forward over an ``hw`` window under a
+    plane schedule, memoized on the (geometry, schedule) signature.  Tiled
+    serving and the tile-size autotuner both price thousands of windows drawn
+    from a handful of (shape, class-schedule) signatures — the cache turns
+    the per-window rebuild of the layer stack into a dict hit."""
+    key_hw = (hw, hw) if isinstance(hw, int) else (int(hw[0]), int(hw[1]))
+    planes = tuple(int(b) for b in schedule)
+    return _unet_window_cycles_cached(
+        key_hw, in_ch, base, depth, convs_per_stage, planes, mode
+    )
 
 
 @dataclass

@@ -25,6 +25,7 @@ Schedules are consumed three ways downstream:
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Iterator, Sequence
 
@@ -126,38 +127,46 @@ class PlaneSchedule:
 
     # ----------------------------------------------------- tile refinement
 
-    def refine(self, amp_ratio: float) -> "PlaneSchedule":
+    def refine(self, amp_ratio: float | Sequence[float]) -> "PlaneSchedule":
         """Content-adaptive *tile-level* refinement of this (layer-level)
         schedule, the per-region precision assignment of MINT.
 
-        ``amp_ratio`` (0 < r <= 1) is the activation amplitude of a spatial
+        ``amp_ratio`` (0 <= r <= 1) is the activation amplitude of a spatial
         region (an image tile) relative to the level this schedule was
-        certified at.  Dynamic per-tile quantization gives that region a
-        scale ``r``x smaller, so each truncated digit costs ``r``x less
-        *absolute* error; layer ``l`` may therefore drop extra LSB digits
-        while staying inside the absolute budget its certified bound
-        already pays for:
+        certified at — a scalar applied to every layer, or a per-layer
+        sequence of measured ratios (what ``repro.autotune`` calibrates,
+        replacing the "same ratio at every depth" heuristic).  Dynamic
+        per-tile quantization gives that region a scale ``r``x smaller, so
+        each truncated digit costs ``r``x less *absolute* error; layer
+        ``l`` may therefore drop extra LSB digits while staying inside the
+        absolute budget its certified bound already pays for:
 
-            largest d' such that (2^d' - 1) * r  <=  2^d_l - 1
+            largest d' such that (2^d' - 1) * r_l  <=  2^d_l - 1
 
         with ``d_l = 8 - planes[l]`` the drop the layer schedule certified.
         By construction the refined tile error, expressed in the schedule's
         calibration units, never exceeds ``layer_bounds[l]`` — flat
         background tiles consume fewer MSB digits for free.  Full-precision
-        layers (``d_l = 0``, zero certified budget) are never refined, and
-        ``r = 1`` is the identity.
+        layers (``d_l = 0``, zero certified budget) are never refined,
+        ``r = 1`` is the identity, and ``r = 0`` (an exactly-flat window,
+        which quantizes to all-zero planes) refines maximally while never
+        dropping below 1 plane.  Chained refinement composes soundly:
+        ``s.refine(r1).refine(r2)`` satisfies the parent inequality at the
+        product ratio ``r1*r2``, so it never exceeds ``s``'s certificate.
+
+        NaN and infinite ratios are rejected — a calibration bug must fail
+        loudly, not silently pick a precision.
         """
-        if not (0.0 < amp_ratio <= 1.0):
-            raise ValueError(f"amp_ratio {amp_ratio} outside (0, 1]")
+        ratios = self._validated_ratios(amp_ratio)
         refined = []
-        for b in self.planes:
+        for b, r in zip(self.planes, ratios):
             d = N_BITS - b
             if d == 0:
                 refined.append(b)
                 continue
             budget = float(2**d - 1)
             d2 = d
-            while d2 < N_BITS - 1 and (2 ** (d2 + 1) - 1) * amp_ratio <= budget:
+            while d2 < N_BITS - 1 and (2 ** (d2 + 1) - 1) * r <= budget:
                 d2 += 1
             refined.append(N_BITS - d2)
         # layer_bounds stay valid: they bound the refined tile's error in
@@ -167,6 +176,27 @@ class PlaneSchedule:
             target_rel_err=self.target_rel_err,
             layer_bounds=self.layer_bounds,
         )
+
+    def _validated_ratios(self, amp_ratio) -> tuple[float, ...]:
+        try:
+            ratios = (float(amp_ratio),) * len(self.planes)
+        except TypeError:
+            ratios = tuple(float(r) for r in amp_ratio)
+            if len(ratios) != len(self.planes):
+                raise ValueError(
+                    f"{len(ratios)} amplitude ratios for "
+                    f"{len(self.planes)} layers — refine needs one ratio "
+                    f"per layer (or a scalar)"
+                )
+        for r in ratios:
+            if math.isnan(r) or math.isinf(r):
+                raise ValueError(
+                    f"amp_ratio {r} is not finite — amplitude calibration "
+                    f"produced garbage; refusing to pick a precision from it"
+                )
+            if not (0.0 <= r <= 1.0):
+                raise ValueError(f"amp_ratio {r} outside [0, 1]")
+        return ratios
 
     # ------------------------------------------------------------- metrics
 

@@ -60,6 +60,45 @@ class UNetConfig:
             return PlaneSchedule.from_list(self.plane_schedule)
         return PlaneSchedule.uniform(self.planes, n)
 
+    # ------------------------------------------------------- tile geometry
+
+    def min_viable_tile(self) -> int:
+        """Smallest core stride worth tiling at: the first multiple of
+        ``2**depth`` strictly larger than twice the receptive-field halo, so
+        a tile's valid core is at least as large as the redundant context it
+        pays for on each axis."""
+        from repro.segserve.tiling import halo_for  # lazy: segserve imports us
+
+        mult = 2**self.depth
+        halo = halo_for(self.depth, self.convs_per_stage)
+        return (2 * halo // mult + 1) * mult
+
+    def validate_tile(self, tile: int, *, halo: int | None = None) -> int:
+        """Geometry check for a tiled deployment of this net: rejects core
+        strides the halo walk proves degenerate (``tile <= 2*halo`` means
+        every interior window is mostly halo, so the tiling computes more
+        redundant context than useful core) with the minimum viable tile
+        named.  ``halo=None`` checks against the exact receptive-field halo;
+        an explicit smaller halo (seam-tolerant modes) relaxes the check.
+        Returns ``tile`` so call sites can validate inline."""
+        from repro.segserve.tiling import halo_for  # lazy: segserve imports us
+
+        mult = 2**self.depth
+        if tile < mult or tile % mult:
+            raise ValueError(
+                f"tile {tile} must be a positive multiple of 2**depth = {mult}"
+            )
+        h = halo_for(self.depth, self.convs_per_stage) if halo is None else halo
+        if h > 0 and tile <= 2 * h:
+            min_viable = (2 * h // mult + 1) * mult
+            raise ValueError(
+                f"tile {tile} <= 2*halo = {2 * h} at depth {self.depth} "
+                f"(convs_per_stage={self.convs_per_stage}): every interior "
+                f"window would be mostly redundant halo context; the minimum "
+                f"viable tile for this geometry is {min_viable}"
+            )
+        return tile
+
 
 def _conv_init(key, kh, kw, cin, cout):
     std = 1.0 / jnp.sqrt(kh * kw * cin)
@@ -131,7 +170,7 @@ def conv3x3(p, x, cfg: UNetConfig, *, planes: int | None = None):
     return out + p["b"]
 
 
-def forward(params, x, cfg: UNetConfig):
+def forward(params, x, cfg: UNetConfig, *, planes_arr=None, taps=None):
     """x: (N, H, W, Cin) -> logits (N, H, W, n_classes).
 
     3x3 convs are visited in the same order as ``cfg.conv_layers()`` /
@@ -142,6 +181,21 @@ def forward(params, x, cfg: UNetConfig):
     server run rectangular crops through this same function), but both must
     divide by ``2**depth`` so the pool/upsample ladder round-trips; anything
     else used to die deep in the decoder concat, so reject it up front.
+
+    Two calibration hooks (``repro.autotune``), both off by default:
+
+    ``planes_arr``
+        an (L,) int32 array of per-conv plane budgets that *overrides*
+        ``cfg``'s schedule.  Because it may be a traced value (the budgets
+        ride in as data via the exact bit-mask identity,
+        ``bitplane.truncate_to_planes``), one compilation serves every
+        candidate schedule — the search loop sweeps hundreds of schedules
+        without retracing.  Quantized datapath only; ignored for float.
+    ``taps``
+        a list to append each post-ReLU conv activation to, in schedule
+        order — the instrumented forward activation statistics are read
+        from.  Appends traced arrays under ``jit``; have the jitted wrapper
+        return them.
     """
     mult = 2**cfg.depth
     if x.shape[1] % mult or x.shape[2] % mult:
@@ -155,9 +209,15 @@ def forward(params, x, cfg: UNetConfig):
 
     def qconv(conv, h):
         nonlocal li
-        pl = sched.planes_for(li) if sched is not None else None
+        if planes_arr is not None and cfg.quant_mode == "mma_int8":
+            pl = planes_arr[li]
+        else:
+            pl = sched.planes_for(li) if sched is not None else None
         li += 1
-        return jax.nn.relu(conv3x3(conv, h, cfg, planes=pl))
+        out = jax.nn.relu(conv3x3(conv, h, cfg, planes=pl))
+        if taps is not None:
+            taps.append(out)
+        return out
 
     skips = []
     h = x

@@ -53,6 +53,29 @@ def budget_class(ratio: float, *, max_class: int = MAX_CLASS) -> int:
     return min(max_class, max(0, int(math.floor(-math.log2(ratio)))))
 
 
+def budget_class_from_thresholds(
+    ratio: float, thresholds: tuple[float, ...]
+) -> int:
+    """Budget class under *calibrated* thresholds (``repro.autotune``):
+    the largest class ``c`` whose threshold still bounds the ratio
+    (``ratio <= thresholds[c]``).  ``thresholds`` descend from 1.0, one per
+    class — typically the amplitude octaves the calibration set actually
+    occupies, so empty octaves cost no jit signatures.  A ratio calibration
+    never saw lands in the nearest *louder* class — conservative (it drops
+    no more digits than its measured-ratio bound allows)."""
+    if not (0.0 <= ratio <= 1.0):
+        raise ValueError(f"ratio {ratio} outside [0, 1]")
+    if not thresholds or thresholds[0] != 1.0:
+        raise ValueError(f"thresholds must start at 1.0, got {thresholds}")
+    k = 0
+    for c, t in enumerate(thresholds):
+        if ratio <= t:
+            k = c
+        else:
+            break
+    return k
+
+
 def class_schedule(base: PlaneSchedule, k: int) -> PlaneSchedule:
     """The static refined schedule micro-batches of class-``k`` tiles run:
     ``base`` refined at the class's conservative ratio bound 2**-k."""
@@ -69,17 +92,21 @@ def classify_tiles(
     *,
     max_class: int = MAX_CLASS,
     amax: float | None = None,
+    thresholds: tuple[float, ...] | None = None,
 ) -> list[int]:
     """Budget class per tile of ``plan``, from each tile's *input window*
     (halo included — the window is what the forward actually consumes).
     Pass ``amax`` (the canvas abs-max) if already computed — admission
-    also needs it for the amplitude-octave group key."""
+    also needs it for the amplitude-octave group key.  ``thresholds``
+    switches from fixed octaves to a calibrated class table
+    (:func:`budget_class_from_thresholds`)."""
     if amax is None:
         amax = float(np.max(np.abs(canvas)))
-    return [
-        budget_class(
-            amplitude_ratio(canvas[t.y0 : t.y1, t.x0 : t.x1], amax),
-            max_class=max_class,
-        )
-        for t in plan.tiles
-    ]
+    out = []
+    for t in plan.tiles:
+        r = amplitude_ratio(canvas[t.y0 : t.y1, t.x0 : t.x1], amax)
+        if thresholds is not None:
+            out.append(budget_class_from_thresholds(r, thresholds))
+        else:
+            out.append(budget_class(r, max_class=max_class))
+    return out

@@ -24,6 +24,7 @@ honestly) under its refined schedule, against the useful whole-canvas ops
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from dataclasses import dataclass, field
 
@@ -41,6 +42,28 @@ from . import adaptive, tiling
 _IMPLIED_POWER_W = (
     cm.PAPER_TABLE1["proposed"]["gops"] / cm.PAPER_TABLE1["proposed"]["gops_w"]
 )
+
+
+@functools.lru_cache(maxsize=2)
+def _shared_forward(per_tile_quant: bool):
+    """Process-wide jitted tile forward, shared by every engine instance so
+    repeated engine construction (the autotuner's certify loop, the bench's
+    row sweep) reuses one compile cache instead of re-tracing per engine.
+
+    ``per_tile_quant=True`` vmaps the forward over the micro-batch, so the
+    dynamic activation quantization inside sees one tile at a time: each
+    tile gets its *own* int8 scale, numerics stop depending on which tiles
+    happened to share a batch, and the per-tile certificate of a
+    :class:`~repro.autotune.plan.TunedPlan` (computed on single windows)
+    transfers to the batched serving path exactly."""
+    if per_tile_quant:
+        def fwd(params, x, cfg):
+            return jax.vmap(
+                lambda xi: unet.forward(params, xi[None], cfg)[0]
+            )(x)
+
+        return jax.jit(fwd, static_argnums=2)
+    return jax.jit(unet.forward, static_argnums=2)
 
 
 @dataclass
@@ -107,6 +130,13 @@ class SegEngine:
       adaptive: refine the layer schedule per budget class (quantized
         datapath only).
       max_class: amplitude-octave cap for flat/empty tiles.
+      plan: a :class:`~repro.autotune.plan.TunedPlan` — overrides ``tile``
+        and ``halo`` with the tuned geometry (validated through
+        ``cfg.validate_tile``), classifies tiles by the *calibrated*
+        thresholds instead of fixed octaves, runs each class at the plan's
+        measured-ratio refined schedule, and switches the quantized
+        datapath to per-tile activation scales so the plan's certificate
+        transfers to the batched path exactly.
     """
 
     def __init__(
@@ -120,9 +150,25 @@ class SegEngine:
         max_active: int = 4,
         adaptive: bool = True,
         max_class: int = adaptive.MAX_CLASS,
+        plan=None,
     ):
         self.cfg = cfg
         self.params = params
+        self.plan = plan
+        if plan is not None:
+            if getattr(plan, "workload", "unet") != "unet":
+                raise ValueError(
+                    f"cannot serve a {plan.workload!r} plan through the "
+                    f"segmentation engine"
+                )
+            if len(plan.planes) != len(cfg.conv_layers()):
+                raise ValueError(
+                    f"plan covers {len(plan.planes)} convs but this "
+                    f"geometry has {len(cfg.conv_layers())}"
+                )
+            # the halo walk's geometry guard, through UNetConfig validation
+            tile = cfg.validate_tile(int(plan.tile), halo=int(plan.halo))
+            halo = int(plan.halo)
         mult = 2**cfg.depth
         if tile < mult or tile % mult:
             raise ValueError(
@@ -135,47 +181,53 @@ class SegEngine:
         self.tile = tile
         self.halo = halo
         self.batch = batch
-        self.adaptive = adaptive and cfg.quant_mode == "mma_int8"
-        self.max_class = max_class
-        self.base_schedule = (
-            cfg.schedule()
-            if cfg.quant_mode == "mma_int8"
-            else PlaneSchedule.uniform(8, len(cfg.conv_layers()))
+        quantized = cfg.quant_mode == "mma_int8"
+        self.adaptive = adaptive and quantized and (
+            plan is None or plan.class_thresholds is not None
         )
+        self.max_class = max_class
+        if plan is not None and quantized:
+            self.base_schedule = plan.schedule()
+        elif quantized:
+            self.base_schedule = cfg.schedule()
+        else:
+            self.base_schedule = PlaneSchedule.uniform(
+                8, len(cfg.conv_layers())
+            )
         self.queue: FifoQueue[SegRequest] = FifoQueue()
         self.slots: SlotTable[SegRequest] = SlotTable(max_active)
         # (in_h, in_w, class, amax_octave) -> [(request, tile_index), ...]
         self._tasks: dict[tuple[int, int, int, int], list] = {}
-        self._fwd = jax.jit(unet.forward, static_argnums=2)
+        self._fwd = _shared_forward(plan is not None and quantized)
         self._cfg_for_class: dict[int, unet.UNetConfig] = {}
-        self._cycles_for: dict[tuple[int, int, int], int] = {}
         self._next_rid = 0
 
     # ----------------------------------------------------------- schedules
 
+    def _class_planes(self, k: int) -> tuple[int, ...]:
+        """Per-layer budgets class-``k`` micro-batches run: the plan's
+        calibrated table, else the octave-heuristic refinement."""
+        if self.plan is not None:
+            return tuple(self.plan.class_schedule(k))
+        return adaptive.class_schedule(self.base_schedule, k).planes
+
     def class_cfg(self, k: int) -> unet.UNetConfig:
         """The (static, jit-cache-keyed) config class-``k`` batches run."""
         if k not in self._cfg_for_class:
-            refined = adaptive.class_schedule(self.base_schedule, k)
             cfg = self.cfg
             if cfg.quant_mode == "mma_int8":
                 cfg = dataclasses.replace(
-                    cfg, plane_schedule=tuple(refined.planes)
+                    cfg, plane_schedule=self._class_planes(k)
                 )
             self._cfg_for_class[k] = cfg
         return self._cfg_for_class[k]
 
     def _tile_cycles(self, in_h: int, in_w: int, k: int) -> int:
         """Relation-(2) cycles of one (in_h, in_w) tile at class ``k``."""
-        key = (in_h, in_w, k)
-        if key not in self._cycles_for:
-            layers = cm.unet_conv_layers(
-                (in_h, in_w), self.cfg.in_ch, self.cfg.base, self.cfg.depth,
-                self.cfg.convs_per_stage,
-            )
-            sched = adaptive.class_schedule(self.base_schedule, k)
-            self._cycles_for[key] = cm.schedule_cycles(layers, sched)
-        return self._cycles_for[key]
+        return cm.unet_window_cycles(
+            (in_h, in_w), self.cfg.in_ch, self.cfg.base, self.cfg.depth,
+            self.cfg.convs_per_stage, self._class_planes(k),
+        )
 
     # ------------------------------------------------------------ admission
 
@@ -219,11 +271,21 @@ class SegEngine:
         amax = float(np.max(np.abs(canvas)))
         if self.adaptive:
             classes = adaptive.classify_tiles(
-                canvas, req.plan, max_class=self.max_class, amax=amax
+                canvas, req.plan, max_class=self.max_class, amax=amax,
+                thresholds=(
+                    None if self.plan is None else self.plan.class_thresholds
+                ),
             )
         else:
             classes = [0] * req.plan.n_tiles
-        octave = int(math.floor(math.log2(amax))) if amax > 0 else 0
+        # The octave key component keeps batch-shared dynamic scales
+        # compatible; under a plan the forward quantizes per tile, numerics
+        # are batch-composition independent, and splitting groups by octave
+        # would only fragment the packing — so collapse it.
+        if self.plan is not None:
+            octave = 0
+        else:
+            octave = int(math.floor(math.log2(amax))) if amax > 0 else 0
         for ti, (spec, k) in enumerate(zip(req.plan.tiles, classes)):
             key = (spec.in_h, spec.in_w, k, octave)
             self._tasks.setdefault(key, []).append((req, ti))

@@ -1,0 +1,318 @@
+"""Autotune subsystem: calibration determinism, the search's error budget
+(property, over randomized geometries), TunedPlan JSON round-trip, the
+tile-geometry guard, tiled-vs-whole equivalence at tuned (non-32) tiles,
+and the certified benches' smoke paths."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import autotune
+from repro.autotune import TunedPlan, calibrate_unet, tune_unet
+from repro.models import unet
+from repro.segserve import SegEngine, tiling
+from repro.segserve.adaptive import budget_class_from_thresholds
+
+
+@functools.lru_cache(maxsize=8)
+def _qnet(depth=1, base=4, in_ch=3, n_classes=3):
+    cfg = unet.UNetConfig(
+        hw=16, in_ch=in_ch, base=base, depth=depth, convs_per_stage=1,
+        n_classes=n_classes, quant_mode="mma_int8", impl="xla",
+    )
+    return cfg, unet.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _calib_image(seed=0, h=48, w=40, c=3):
+    rng = np.random.default_rng(seed)
+    img = rng.normal(0.0, 0.01, (h, w, c))
+    img[4:16, 4:16] += rng.normal(0.0, 1.0, (12, 12, c))
+    return img.astype(np.float32)
+
+
+@functools.lru_cache(maxsize=4)
+def _tuned(target_milli=100):
+    cfg, params = _qnet()
+    plan = tune_unet(
+        params, cfg, [_calib_image()], target_rel_err=target_milli / 1000.0
+    )
+    return cfg, params, plan
+
+
+# ------------------------------------------------------------ calibration
+
+
+def test_calibration_deterministic():
+    """Same PRNG, same weights, same images -> bitwise-identical statistics
+    and fingerprint (the property a plan's fingerprint is built on)."""
+    cfg, params = _qnet()
+    images = [_calib_image(0), _calib_image(1)]
+    a = calibrate_unet(params, cfg, images)
+    b = calibrate_unet(params, cfg, images)
+    assert a == b
+    assert a.fingerprint == b.fingerprint
+    # different calibration inputs -> different fingerprint
+    c = calibrate_unet(params, cfg, [_calib_image(2)])
+    assert c.fingerprint != a.fingerprint
+    # structure: one sensitivity row per conv, thresholds descend from 1.0
+    assert a.n_layers == len(cfg.conv_layers())
+    assert a.class_thresholds[0] == 1.0
+    assert all(
+        x > y for x, y in zip(a.class_thresholds, a.class_thresholds[1:])
+    )
+    assert len(a.class_ratios) == len(a.class_thresholds)
+    for row in a.sensitivity:
+        assert row[-1] == 0.0  # 8 planes == reference
+    assert sum(a.class_counts) == sum(a.octave_hist)
+
+
+def test_calibration_rejects_float_config():
+    cfg, params = _qnet()
+    with pytest.raises(ValueError, match="mma_int8"):
+        calibrate_unet(
+            params, dataclasses.replace(cfg, quant_mode="none"),
+            [_calib_image()],
+        )
+    with pytest.raises(ValueError, match="at least one image"):
+        calibrate_unet(params, cfg, [])
+
+
+# ------------------------------------------------- the search's guarantee
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(8, 30))
+@settings(max_examples=4, deadline=None)
+def test_search_respects_error_budget(seed, target_centi):
+    """The acceptance property: on randomized geometry/content/target, the
+    tuned plan's measured error fits its certificate, the certificate fits
+    the target, and the plan beats the uniform-8 datapath on cycles
+    (or matches it when nothing was droppable)."""
+    rng = np.random.default_rng(seed)
+    depth = int(rng.integers(1, 3))
+    base = int(rng.integers(2, 5))
+    in_ch = int(rng.integers(1, 3))
+    target = target_centi / 100.0
+    cfg = unet.UNetConfig(
+        hw=16, in_ch=in_ch, base=base, depth=depth, convs_per_stage=1,
+        n_classes=2, quant_mode="mma_int8", impl="xla",
+    )
+    params = unet.init_params(jax.random.PRNGKey(seed % 1000), cfg)
+    h, w = int(rng.integers(16, 40)), int(rng.integers(16, 40))
+    img = rng.normal(0.0, 0.01, (h, w, in_ch)).astype(np.float32)
+    img[: h // 2, : w // 2] += rng.normal(
+        0.0, 1.0, (h // 2, w // 2, in_ch)
+    ).astype(np.float32)
+    plan = tune_unet(
+        params, cfg, [img], target_rel_err=target, sound_bound=False
+    )
+    cert = plan.certificate
+    assert cert["measured_rel_err"] <= cert["cert"] <= target
+    assert cert["holds"]
+    assert all(1 <= b <= 8 for b in plan.planes)
+    assert plan.tile >= cfg.min_viable_tile()
+    for cp in plan.class_planes:
+        assert all(1 <= b <= 8 for b in cp)
+        assert all(r <= b for r, b in zip(cp, (8,) * len(cp)))
+    # cycles never exceed the uniform-8 account at the same geometry
+    assert plan.modeled["cycles_calib"] <= plan.modeled["full8_cycles_calib"]
+    # the served path reproduces the certified measurement exactly
+    eng = autotune.engine_from_plan(cfg, params, plan)
+    ref = autotune.engine_from_plan(cfg, params, autotune.reference_plan(plan))
+    got = eng.run([img])[0].logits
+    want = ref.run([img])[0].logits
+    denom = max(float(np.max(np.abs(want))), 1e-8)
+    measured = float(np.max(np.abs(got - want))) / denom
+    assert measured <= cert["cert"] + 1e-12
+
+
+def test_sound_bound_covers_measurement():
+    """The per-tile interval extension is sound: it upper-bounds the
+    measured error of the exact per-tile-quantized serving path."""
+    cfg, params, plan = _tuned()
+    assert plan.certificate["sound_bound"] >= plan.certificate["measured_rel_err"]
+
+
+# --------------------------------------------------------- plan round trip
+
+
+def test_tuned_plan_json_round_trip(tmp_path):
+    cfg, params, plan = _tuned()
+    assert TunedPlan.from_json(plan.to_json()) == plan
+    path = tmp_path / "plans" / "unet.json"
+    plan.save(path)
+    assert TunedPlan.load(path) == plan
+    # a newer plan version must not be silently misread
+    newer = dict(plan.to_json(), version=plan.version + 1)
+    with pytest.raises(ValueError, match="newer"):
+        TunedPlan.from_json(newer)
+
+
+def test_plan_validation():
+    cfg, params, plan = _tuned()
+    with pytest.raises(ValueError):
+        dataclasses.replace(plan, planes=(0,) * len(plan.planes))
+    with pytest.raises(ValueError):
+        dataclasses.replace(plan, workload="vae")
+    with pytest.raises(ValueError):  # thresholds must start at 1.0
+        dataclasses.replace(
+            plan, class_thresholds=(0.5,) + plan.class_thresholds[1:]
+        )
+    with pytest.raises(ValueError, match="minimum viable tile"):
+        dataclasses.replace(plan, tile=2 * plan.halo)
+
+
+# ------------------------------------------------------ tile geometry guard
+
+
+def test_unet_config_tile_validation():
+    """The satellite guard: tiles the halo walk proves degenerate are
+    rejected with the minimum viable tile named."""
+    cfg = unet.UNetConfig(depth=3, convs_per_stage=1)
+    assert cfg.min_viable_tile() == 56  # halo 24 at depth 3
+    assert cfg.validate_tile(56) == 56
+    with pytest.raises(ValueError, match="minimum viable tile for this "
+                                         "geometry is 56"):
+        cfg.validate_tile(48)
+    with pytest.raises(ValueError, match="multiple of 2\\*\\*depth"):
+        cfg.validate_tile(30)
+    # an explicitly smaller halo relaxes the guard; halo=0 disables it
+    assert cfg.validate_tile(32, halo=8) == 32
+    assert cfg.validate_tile(8, halo=0) == 8
+    with pytest.raises(ValueError):
+        cfg.validate_tile(16, halo=8)
+    # depth-1 geometry: halo 6 -> minimum viable 14
+    assert unet.UNetConfig(depth=1, convs_per_stage=1).min_viable_tile() == 14
+
+
+def test_engine_rejects_degenerate_plan_tile():
+    cfg, params, plan = _tuned()
+    bad = plan.to_json()
+    bad["tile"] = 2 * plan.halo  # resurrect an invalid tile
+    with pytest.raises(ValueError, match="minimum viable tile"):
+        TunedPlan.from_json(bad)
+
+
+# ------------------------------------- tiled-vs-whole under the tuned tile
+
+
+def _whole_ref(params, image, cfg):
+    mult = 2**cfg.depth
+    h, w = image.shape[:2]
+    pad = np.pad(image, ((0, -h % mult), (0, -w % mult), (0, 0)))
+    out = unet.forward(params, jnp.asarray(pad[None]), cfg)
+    return np.asarray(out[0])[:h, :w]
+
+
+def test_tiled_matches_whole_under_tuned_tile():
+    """Equivalence holds at the tuned (non-32) tile: the float datapath
+    through a plan-driven engine equals the whole-image forward."""
+    cfg, params, plan = _tuned()
+    assert plan.tile != 32  # the tuner picked its own geometry
+    fcfg = dataclasses.replace(cfg, quant_mode="none")
+    image = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(7), (37, 29, cfg.in_ch))
+    )
+    eng = SegEngine(fcfg, params, plan=plan)
+    assert eng.tile == plan.tile and eng.halo == plan.halo
+    res = eng.run([image])[0]
+    np.testing.assert_allclose(
+        res.logits, _whole_ref(params, image, fcfg), rtol=1e-4, atol=1e-4
+    )
+    # and an explicit non-32 tile through the classic engine, for contrast
+    res24 = SegEngine(fcfg, params, tile=24).run([image])[0]
+    np.testing.assert_allclose(
+        res24.logits, _whole_ref(params, image, fcfg), rtol=1e-4, atol=1e-4
+    )
+
+
+# ----------------------------------------------- calibrated budget classes
+
+
+def test_budget_class_from_thresholds():
+    th = (1.0, 0.25, 0.015625)
+    assert budget_class_from_thresholds(1.0, th) == 0
+    assert budget_class_from_thresholds(0.3, th) == 0
+    assert budget_class_from_thresholds(0.25, th) == 1
+    assert budget_class_from_thresholds(0.02, th) == 1
+    assert budget_class_from_thresholds(0.01, th) == 2
+    assert budget_class_from_thresholds(0.0, th) == 2
+    with pytest.raises(ValueError):
+        budget_class_from_thresholds(1.5, th)
+    with pytest.raises(ValueError):
+        budget_class_from_thresholds(0.5, (0.9, 0.1))
+    # monotone: quieter never gets a louder class
+    ks = [budget_class_from_thresholds(r, th)
+          for r in (1.0, 0.5, 0.25, 0.1, 0.01, 0.0)]
+    assert ks == sorted(ks)
+
+
+def test_plan_class_refinement_stays_inside_certificate():
+    """Every calibrated class schedule refines the base schedule under the
+    sound per-layer inequality at the class's recorded ratio bound."""
+    cfg, params, plan = _tuned()
+    for c, cp in enumerate(plan.class_planes):
+        for b_base, b_ref in zip(plan.planes, cp):
+            assert 1 <= b_ref <= b_base or b_ref == b_base == 8
+            assert b_ref <= b_base
+
+
+# ------------------------------------------------------------------ LM path
+
+
+def test_tune_lm_certifies_and_installs():
+    from repro.configs import get_smoke_config
+    from repro.serve.engine import lm_schedule_from_plan
+
+    cfg = get_smoke_config("yi_6b")
+    from repro import models
+
+    mod = models.build(cfg)
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    toks = np.random.default_rng(0).integers(0, cfg.vocab, (2, 8))
+    plan = autotune.tune_lm(params, cfg, toks, target_rel_err=0.5)
+    assert plan.workload == "lm"
+    assert len(plan.planes) == cfg.n_layers
+    cert = plan.certificate
+    assert cert["measured_rel_err"] <= cert["cert"] <= 0.5
+    sched = lm_schedule_from_plan(plan, cfg)
+    assert sched.planes == plan.planes
+    qcfg = autotune.apply_plan_lm(cfg, plan)
+    assert qcfg.quant.plane_schedule == plan.planes
+    out = mod.forward(params, jnp.asarray(toks, jnp.int32), qcfg)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+    with pytest.raises(ValueError):
+        lm_schedule_from_plan(plan, cfg.replace(n_layers=cfg.n_layers + 1))
+    with pytest.raises(ValueError):
+        autotune.apply_plan(unet.UNetConfig(), plan)
+
+
+# ------------------------------------------------------------ bench smoke
+
+
+def test_autotune_bench_smoke(tmp_path):
+    """The registered frontier bench emits the tracker datapoint, the
+    certificates hold, and the tuned plan dominates the served
+    from_weights baseline."""
+    import json
+
+    from benchmarks import autotune as bench
+
+    path = tmp_path / "BENCH_autotune.json"
+    rows = bench.run(
+        base=4, image_hw=(80, 64), targets=(0.1, 0.05), headline=0.05,
+        n_calib=1, json_path=str(path),
+    )
+    assert any(name.startswith("autotune/tuned-") for name, _, _ in rows)
+    data = json.loads(path.read_text())
+    assert data["dominance"]["holds"]
+    assert data["dominance"]["speedup"] > 1.0
+    kinds = {r["kind"] for r in data["rows"]}
+    assert kinds == {"frontier", "from_weights", "tuned"}
+    for r in data["rows"]:
+        if r["kind"] == "tuned":
+            assert r["rel_err"] <= r["cert"] <= r["target_rel_err"]
+        assert "cycles" in r and "gops_w" in r and "rel_err" in r

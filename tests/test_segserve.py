@@ -170,9 +170,9 @@ def test_refine_identity_and_validation():
     s = PlaneSchedule.from_list([8, 5, 3])
     assert s.refine(1.0).planes == s.planes
     with pytest.raises(ValueError):
-        s.refine(0.0)
-    with pytest.raises(ValueError):
         s.refine(1.5)
+    with pytest.raises(ValueError):
+        s.refine(-0.25)
     # monotone: quieter tiles never get more planes
     prev = None
     for k in range(7):
@@ -180,6 +180,48 @@ def test_refine_identity_and_validation():
         if prev is not None:
             assert all(a <= b for a, b in zip(p, prev))
         prev = p
+
+
+def test_refine_edge_cases():
+    """Satellite guards: flat-zero windows, non-finite ratios, the 1-plane
+    floor, and per-layer ratio vectors."""
+    s = PlaneSchedule.from_list([8, 5, 3, 1])
+    # r = 0 (exactly flat window) refines maximally but never below 1 plane
+    # and never touches full-precision (zero-budget) layers
+    assert s.refine(0.0).planes == (8, 1, 1, 1)
+    # non-finite ratios are calibration bugs — refuse loudly
+    for bad in (float("nan"), float("inf"), -float("inf")):
+        with pytest.raises(ValueError, match="not finite"):
+            s.refine(bad)
+    # a tiny-but-positive ratio also bottoms out at 1 plane
+    assert all(b >= 1 for b in s.refine(1e-30).planes)
+    # per-layer measured ratios: each layer refined at its own ratio
+    per_layer = s.refine([1.0, 1.0, 0.25, 0.0])
+    assert per_layer.planes == (8, 5, s.refine(0.25).planes[2], 1)
+    with pytest.raises(ValueError, match="per layer"):
+        s.refine([0.5, 0.5])
+
+
+def test_refine_then_refine_never_exceeds_parent_certificate():
+    """Chained refinement stays inside the parent schedule's certified
+    budget at the product ratio: refine(r1).refine(r2) drops no more than
+    the parent inequality allows at r1*r2."""
+    for planes in ([8, 6, 4, 2], [7, 7, 7], [5, 1]):
+        s = PlaneSchedule.from_list(planes)
+        for r1 in (1.0, 0.5, 0.3, 0.01):
+            for r2 in (1.0, 0.5, 0.125, 0.0):
+                chained = s.refine(r1).refine(r2)
+                for b0, b2 in zip(s.planes, chained.planes):
+                    d0, d2 = 8 - b0, 8 - b2
+                    # the parent certificate at the product ratio
+                    assert (2**d2 - 1) * r1 * r2 <= (2**d0 - 1)
+                    if d0 == 0:
+                        assert d2 == 0
+                # refining in one shot at the product is at least as deep
+                one_shot = s.refine(r1 * r2)
+                assert all(
+                    c >= o for c, o in zip(chained.planes, one_shot.planes)
+                )
 
 
 def test_budget_class_edges():
@@ -358,14 +400,15 @@ def test_rectangular_conv_layers():
 
 
 def test_segserve_bench_smoke(tmp_path):
-    """The registered benchmark emits the tracker's JSON datapoint and
-    demonstrates the adaptive-vs-uniform cycle win."""
+    """The registered benchmark emits the tracker's JSON datapoint,
+    demonstrates the tuned-vs-uniform cycle win, and enforces the
+    certificate gate (measured <= cert <= target)."""
     import json
 
     from benchmarks import segserve as bench
 
     path = tmp_path / "BENCH_segserve.json"
-    rows = bench.run(base=4, image_hw=(80, 64), tile=16,
+    rows = bench.run(base=4, image_hw=(80, 64), tile=16, n_calib=1,
                      json_path=str(path))
     assert [r[0] for r in rows] == [
         "segserve/full-8", "segserve/uniform", "segserve/adaptive"
@@ -380,3 +423,11 @@ def test_segserve_bench_smoke(tmp_path):
         for key in ("cycles", "ops", "time_ms", "gops", "gops_w",
                     "energy_mj", "rel_err"):
             assert key in row
+    # the satellite gate: certified next to measured, and it must hold —
+    # with a tuned plan the adaptive row actually meets the target
+    gate = data["gate"]
+    assert gate["holds"]
+    assert gate["measured"] <= gate["cert"] <= gate["target"]
+    assert by_name["adaptive"]["rel_err"] <= data["target_rel_err"]
+    assert by_name["adaptive"]["cert"] == gate["cert"]
+    assert data["plan"]["workload"] == "unet"
