@@ -1,0 +1,175 @@
+"""Gateway mixed-traffic benchmark — ``BENCH_gateway.json``, the serving
+datapoint of the bench tracker.
+
+One fixed traffic trace — a majority burst of LM decode requests with a
+minority of segmentation images behind it — is replayed through
+:class:`repro.serve.Gateway` under each admission policy (FIFO,
+cycle-budget fair-share, EDF) at the same shared per-round modeled cycle
+budget.  Reported per policy: per-class p50/p99 modeled latency (the
+relation-(2) cycle clock at the paper's 100 MHz), aggregate GOPS/W at the
+paper's implied accelerator power, rounds to drain, and the progressive
+tile stream's structure-first property.
+
+The gate (raises, so CI fails loudly): cycle-budget fair-share must beat
+FIFO *strictly* on the minority class's p99 modeled latency — that is the
+whole point of admission control, and a scheduling regression that lets
+the majority burst starve the minority again must not merge clean.
+``scripts/bench_diff.py`` additionally diffs the GOPS/W of every row
+against the committed baseline at the merge-base.
+
+    PYTHONPATH=src python -m benchmarks.run --section gateway
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+# Majority LM burst ahead of a seg minority: the FIFO head-of-line shape.
+N_LM = 10
+N_SEG = 3
+LM_PROMPT = 4
+LM_MAX_NEW = 8
+SEG_HW = (96, 80)
+ROUND_BUDGET = 1_500_000  # modeled cycles per scheduling round (15 ms)
+POLICIES = ("fifo", "fair", "edf")
+
+
+def run(
+    *,
+    n_lm: int = N_LM,
+    n_seg: int = N_SEG,
+    seg_hw: tuple[int, int] = SEG_HW,
+    round_budget: int = ROUND_BUDGET,
+    json_path: str | None = "BENCH_gateway.json",
+) -> list[tuple[str, float, str]]:
+    import jax
+    import numpy as np
+
+    from repro import models
+    from repro.configs import get_smoke_config
+    from repro.models import unet as unet_mod
+    from repro.segserve.synth import phantom_image
+    from repro.serve import Gateway, LMAdapter, SegAdapter
+
+    lm_cfg = get_smoke_config("minitron_4b")
+    lm_params = models.build(lm_cfg).init_params(jax.random.PRNGKey(0), lm_cfg)
+    seg_cfg = unet_mod.UNetConfig(
+        hw=seg_hw[0], in_ch=4, base=8, depth=2, convs_per_stage=1,
+        n_classes=3, quant_mode="mma_int8", impl="xla",
+    )
+    seg_params = unet_mod.init_params(jax.random.PRNGKey(1), seg_cfg)
+    sched = unet_mod.schedule_from_params(seg_params, 0.05)
+    seg_cfg = dataclasses.replace(seg_cfg, plane_schedule=tuple(sched.planes))
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, lm_cfg.vocab, size=LM_PROMPT) for _ in range(n_lm)]
+    images = [phantom_image(*seg_hw, 4, seed=s) for s in range(n_seg)]
+    minority = "seg" if n_seg < n_lm else "lm"
+
+    rows = []
+    payload_rows = []
+    for policy in POLICIES:
+        gw = Gateway(
+            [
+                LMAdapter(lm_cfg, lm_params, batch=3, max_seq=32),
+                SegAdapter(
+                    seg_cfg, seg_params, tile=16, batch=4, max_active=2
+                ),
+            ],
+            policy=policy,
+            round_budget=round_budget,
+        )
+        # the trace: the LM burst arrives first, the seg minority behind it
+        t0 = time.perf_counter()
+        for p in prompts:
+            gw.submit("lm", p, max_new=LM_MAX_NEW)
+        for im in images:
+            gw.submit("seg", im)
+        gw.drain(max_rounds=10_000)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        st = gw.stats()
+
+        # progressive property along the ride: per request, emitted tile
+        # classes never decrease (structure before background)
+        by_rid: dict[int, list[int]] = {}
+        for ev in gw.tile_events:
+            by_rid.setdefault(ev.rid, []).append(ev.klass)
+        structure_first = all(
+            ks == sorted(ks) for ks in by_rid.values()
+        )
+
+        payload_rows.append(
+            dict(
+                policy=policy,
+                rounds=st["rounds"],
+                clock_cycles=st["clock_cycles"],
+                time_ms=st["clock_cycles"] / 100e6 * 1e3,
+                gops=st["gops"],
+                gops_w=st["gops_w"],
+                per_class=st["per_class"],
+                tile_events=len(gw.tile_events),
+                structure_first=structure_first,
+                wall_us=wall_us,
+            )
+        )
+        per_c = ";".join(
+            f"{k}_p50={v['p50_ms']:.2f};{k}_p99={v['p99_ms']:.2f}"
+            for k, v in st["per_class"].items()
+        )
+        rows.append(
+            (
+                f"gateway/{policy}",
+                st["clock_cycles"] / 100e6 * 1e6,  # modeled us, like segserve
+                f"rounds={st['rounds']};gops_w={st['gops_w']:.3f};{per_c}",
+            )
+        )
+        if not structure_first:
+            raise RuntimeError(
+                f"progressive emission broken under {policy}: a request's "
+                f"background tiles were emitted before its structure tiles"
+            )
+
+    by_policy = {r["policy"]: r for r in payload_rows}
+    fifo_p99 = by_policy["fifo"]["per_class"][minority]["p99_ms"]
+    fair_p99 = by_policy["fair"]["per_class"][minority]["p99_ms"]
+    # The headline gate: fair-share must protect the minority class.
+    if not fair_p99 < fifo_p99:
+        raise RuntimeError(
+            f"cycle-budget fair-share lost its minority-class win: "
+            f"{minority} p99 {fair_p99:.2f} ms under fair vs "
+            f"{fifo_p99:.2f} ms under fifo"
+        )
+
+    if json_path:
+        payload = dict(
+            bench="gateway",
+            traffic=dict(
+                n_lm=n_lm, n_seg=n_seg, lm_prompt=LM_PROMPT,
+                lm_max_new=LM_MAX_NEW, seg_h=seg_hw[0], seg_w=seg_hw[1],
+                minority=minority,
+            ),
+            round_budget=round_budget,
+            rows=payload_rows,
+            gate=dict(
+                minority=minority,
+                fifo_p99_ms=fifo_p99,
+                fair_p99_ms=fair_p99,
+                speedup=fifo_p99 / fair_p99,
+                holds=bool(fair_p99 < fifo_p99),
+            ),
+        )
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_gateway.json")
+    args = ap.parse_args()
+    for name, us, derived in run(json_path=args.json):
+        print(f"{name},{us:.1f},{derived}")

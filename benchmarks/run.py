@@ -1,11 +1,12 @@
 """Benchmark harness — one section per paper table/claim.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--section table1|kernels|roofline|msdf|precision|segserve|autotune]
+        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway]
 
-Prints ``name,us_per_call,derived`` CSV rows.  The segserve and autotune
-sections also write machine-readable ``BENCH_segserve.json`` /
-``BENCH_autotune.json`` for the bench tracker.
+Prints ``name,us_per_call,derived`` CSV rows.  The segserve, autotune and
+gateway sections also write machine-readable ``BENCH_segserve.json`` /
+``BENCH_autotune.json`` / ``BENCH_gateway.json`` for the bench tracker
+(``scripts/bench_diff.py`` diffs them across revisions).
 """
 from __future__ import annotations
 
@@ -75,6 +76,10 @@ def main() -> None:
         from benchmarks import autotune
 
         rows += autotune.run()
+    if args.section in ("all", "gateway"):
+        from benchmarks import gateway
+
+        rows += gateway.run()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

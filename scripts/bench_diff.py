@@ -1,0 +1,232 @@
+"""Cross-revision bench tracker: diff the committed BENCH_*.json baselines
+at the merge-base against the freshly regenerated ones, and fail on
+*frontier* regressions — not just invariant violations.
+
+The per-revision benches already gate their own invariants (certificates
+hold, tuned plans dominate, fair-share protects the minority class).  What
+they cannot see is drift *between* revisions: a change that costs 6% of
+GOPS/W at the same error target, or quietly loosens a certificate, passes
+every in-revision assert and merges clean.  This script closes that hole:
+
+  * **GOPS/W regression** — any row present in both revisions at an equal
+    error target whose GOPS/W dropped by more than ``--gops-w-tol``
+    (default 5%) fails the diff;
+  * **certificate loosening** — any certified row at an equal target whose
+    certified bound grew by more than ``--cert-tol`` (default 1%) fails
+    (a *larger* certified error at the same target means the tuner now
+    promises less);
+  * rows whose error target changed are reported as not-comparable and
+    skipped (a frontier at a different target is a different frontier);
+  * latency shifts in the gateway bench are reported as warnings only
+    (scheduling latency is a trade the gateway bench gates in-revision).
+
+Baselines come from ``git show <merge-base>:<file>`` so the tracker needs
+no external storage — the committed JSONs *are* the trajectory.  A file
+with no baseline (new bench, first revision) passes with a note.
+
+    python scripts/bench_diff.py [--base-ref REF] [--out bench_diff.json]
+
+Exit status: 0 clean, 1 on any regression.  The JSON report (and the
+human-readable table on stdout) is uploaded as a CI artifact either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+DEFAULT_FILES = (
+    "BENCH_segserve.json",
+    "BENCH_autotune.json",
+    "BENCH_gateway.json",
+)
+
+
+def _git(*args: str) -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", *args], capture_output=True, text=True, check=True
+        )
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return out.stdout
+
+
+def resolve_base_ref(explicit: str | None) -> str | None:
+    """The revision to diff against: an explicit ref, else the merge-base
+    with origin/main (falling back to local main)."""
+    if explicit:
+        return explicit
+    for upstream in ("origin/main", "main"):
+        mb = _git("merge-base", "HEAD", upstream)
+        if mb:
+            return mb.strip()
+    return None
+
+
+def load_baseline(ref: str, path: str) -> dict | None:
+    blob = _git("show", f"{ref}:{path}")
+    if blob is None:
+        return None
+    try:
+        return json.loads(blob)
+    except json.JSONDecodeError:
+        return None
+
+
+def comparable_rows(payload: dict):
+    """Normalize one BENCH payload into (row_id, target, metrics) triples.
+
+    ``target`` is the error target the row was produced at (None when the
+    bench has no error axis, e.g. gateway rows); rows only compare across
+    revisions when both id and target match.
+    """
+    bench = payload.get("bench", "?")
+    if bench == "gateway":
+        minority = payload.get("gate", {}).get("minority")
+        for r in payload.get("rows", []):
+            metrics = dict(gops_w=r.get("gops_w"))
+            pc = r.get("per_class", {})
+            if minority in pc and pc[minority].get("p99_ms") is not None:
+                metrics["minority_p99_ms"] = pc[minority]["p99_ms"]
+            yield f"policy:{r['policy']}", None, metrics
+        return
+    file_target = payload.get("target_rel_err")
+    for r in payload.get("rows", []):
+        target = r.get("target_rel_err", file_target)
+        yield r.get("name", "?"), target, dict(
+            gops_w=r.get("gops_w"), cert=r.get("cert")
+        )
+
+
+def diff_file(path: str, base: dict | None, new: dict | None,
+              *, gops_w_tol: float, cert_tol: float) -> list[dict]:
+    entries: list[dict] = []
+
+    def entry(status, row, metric, base_v=None, new_v=None, note=""):
+        entries.append(
+            dict(file=path, row=row, metric=metric, status=status,
+                 base=base_v, new=new_v, note=note)
+        )
+
+    if new is None:
+        entry("regression", "*", "presence", note="bench output missing — "
+              "the tracker cannot see this frontier any more")
+        return entries
+    if base is None:
+        entry("note", "*", "presence", note="no baseline at merge-base "
+              "(new bench) — nothing to diff")
+        return entries
+
+    base_rows = {(rid, tgt): m for rid, tgt, m in comparable_rows(base)}
+    new_rows = {(rid, tgt): m for rid, tgt, m in comparable_rows(new)}
+    base_ids = {rid for rid, _ in base_rows}
+    for (rid, tgt), nm in sorted(new_rows.items(), key=lambda kv: str(kv[0])):
+        if (rid, tgt) not in base_rows:
+            if rid in base_ids:
+                entry("skipped", rid, "target", note=f"error target changed "
+                      f"(now {tgt}) — frontiers not comparable")
+            else:
+                entry("note", rid, "presence", note="new row")
+            continue
+        bm = base_rows[(rid, tgt)]
+        b_g, n_g = bm.get("gops_w"), nm.get("gops_w")
+        if b_g is not None and n_g is None:
+            # a metric the tracker was watching vanished from the bench —
+            # must not silently narrow the gate
+            entry("warning", rid, "gops_w", b_g, None,
+                  note="metric disappeared from the bench")
+        elif b_g and n_g is not None:
+            drop = (b_g - n_g) / b_g
+            status = "regression" if drop > gops_w_tol else "ok"
+            entry(status, rid, "gops_w", b_g, n_g,
+                  note=f"{-drop:+.1%} at target {tgt}")
+        b_c, n_c = bm.get("cert"), nm.get("cert")
+        if b_c is not None and n_c is None:
+            entry("warning", rid, "cert", b_c, None,
+                  note="certified row lost its certificate")
+        elif b_c is not None and n_c is not None:
+            if b_c > 0:
+                loosen = (n_c - b_c) / b_c
+                status = "regression" if loosen > cert_tol else "ok"
+                note = f"{loosen:+.1%} at target {tgt}"
+            else:  # an exact (cert == 0) row may not grow a bound at all
+                status = "regression" if n_c > 1e-12 else "ok"
+                note = f"was exact at target {tgt}"
+            entry(status, rid, "cert", b_c, n_c,
+                  note=note + (" — certificate loosened"
+                               if status == "regression" else ""))
+        b_p, n_p = bm.get("minority_p99_ms"), nm.get("minority_p99_ms")
+        if b_p and n_p is not None:
+            shift = (n_p - b_p) / b_p
+            entry("warning" if shift > 0.10 else "ok", rid,
+                  "minority_p99_ms", b_p, n_p, note=f"{shift:+.1%}")
+    for (rid, tgt) in sorted(set(base_rows) - set(new_rows), key=str):
+        if not any(r == rid for r, _ in new_rows):
+            entry("warning", rid, "presence",
+                  note="row disappeared from the bench")
+    return entries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--base-ref", default=None,
+                    help="revision to diff against (default: merge-base "
+                         "with origin/main)")
+    ap.add_argument("--files", nargs="*", default=list(DEFAULT_FILES))
+    ap.add_argument("--out", default="bench_diff.json")
+    ap.add_argument("--gops-w-tol", type=float, default=0.05,
+                    help="relative GOPS/W drop that fails (default 5%%)")
+    ap.add_argument("--cert-tol", type=float, default=0.01,
+                    help="relative certificate growth that fails (default 1%%)")
+    args = ap.parse_args(argv)
+
+    base_ref = resolve_base_ref(args.base_ref)
+    entries: list[dict] = []
+    if base_ref is None:
+        entries.append(dict(file="*", row="*", metric="presence",
+                            status="note", base=None, new=None,
+                            note="no merge-base resolvable — nothing to diff"))
+    else:
+        for path in args.files:
+            try:
+                with open(path) as f:
+                    new = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                new = None
+            entries += diff_file(
+                path, load_baseline(base_ref, path), new,
+                gops_w_tol=args.gops_w_tol, cert_tol=args.cert_tol,
+            )
+
+    regressions = [e for e in entries if e["status"] == "regression"]
+    report = dict(
+        base_ref=base_ref,
+        files=list(args.files),
+        gops_w_tol=args.gops_w_tol,
+        cert_tol=args.cert_tol,
+        entries=entries,
+        n_regressions=len(regressions),
+        holds=not regressions,
+    )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+
+    print(f"bench_diff vs {base_ref or '<none>'}")
+    for e in entries:
+        base_v = "-" if e["base"] is None else f"{e['base']:.4g}"
+        new_v = "-" if e["new"] is None else f"{e['new']:.4g}"
+        print(f"  [{e['status']:10s}] {e['file']} :: {e['row']} :: "
+              f"{e['metric']}: {base_v} -> {new_v}  {e['note']}")
+    if regressions:
+        print(f"FAIL: {len(regressions)} frontier regression(s)")
+        return 1
+    print("ok: no frontier regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

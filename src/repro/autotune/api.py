@@ -218,6 +218,7 @@ def tune_unet(
                 target_rel_err=target_rel_err, tile=tile, slack=slack,
                 margin=margin, mode=mode, batch=batch,
             ),
+            params_fingerprint=_calibrate.params_fingerprint(params),
             layer_bounds=_layer_bounds(params, planes_now),
             tile=int(tile),
             halo=int(halo),
@@ -228,32 +229,38 @@ def tune_unet(
 
     # ---- certify through the exact serving path -------------------------
     # The full-8 reference depends only on (tile, thresholds, geometry) —
-    # invariant across repairs — so it is served exactly once.
+    # invariant across repairs — so it is served exactly once.  The repair
+    # itself is amortized: the re-add order is deterministic given the
+    # sensitivity table (``search.repair_sequence``), so the loop reduces
+    # to finding the fewest repair steps whose *measured* error fits, and
+    # ``search.bisect_repair`` gallops/bisects that depth in O(log) engine
+    # replays instead of one replay per re-added plane.
     budget = slack * target_rel_err
-    repairs = 0
     cap = max_repair if max_repair is not None else N_BITS * n_layers
     ref_logits = _engine_logits(
         params, cfg, images,
         reference_plan(build(planes, class_planes, {})), batch=batch,
     )
-    while True:
-        candidate = build(planes, class_planes, {})
-        measured = _engine_measured(
-            params, cfg, images, candidate, batch=batch,
+    seq = _search.repair_sequence(planes, calib.sensitivity, cap)
+
+    def planes_after(t: int) -> list[int]:
+        p = list(planes)
+        for l in seq[:t]:
+            p[l] += 1
+        return p
+
+    def measure(t: int) -> float:
+        p = planes_after(t)
+        return _engine_measured(
+            params, cfg, images, build(p, class_tables(p), {}), batch=batch,
             ref_logits=ref_logits,
         )
-        if measured <= budget or repairs >= cap:
-            break
-        worst = max(
-            (l for l in range(n_layers) if planes[l] < N_BITS),
-            key=lambda l: calib.sensitivity[l][planes[l] - 1],
-            default=None,
-        )
-        if worst is None:
-            break
-        planes[worst] += 1
-        class_planes = class_tables(planes)
-        repairs += 1
+
+    repairs, measured, measure_calls = _search.bisect_repair(
+        measure, len(seq), budget
+    )
+    planes = planes_after(repairs)
+    class_planes = class_tables(planes)
 
     cert = float(measured * margin)
     certificate = dict(
@@ -264,6 +271,7 @@ def tune_unet(
         slack=float(slack),
         n_images=len(images),
         repairs=repairs,
+        measure_calls=measure_calls,
         holds=bool(cert <= target_rel_err),
     )
     plan = build(planes, class_planes, certificate)
@@ -385,6 +393,7 @@ def tune_lm(
             params, [np.asarray(toks)], target_rel_err=target_rel_err,
             slack=slack, margin=margin, family=cfg.family,
         ),
+        params_fingerprint=_calibrate.params_fingerprint(params),
         layer_bounds=seed.layer_bounds,
     )
 

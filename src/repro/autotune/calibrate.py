@@ -57,18 +57,29 @@ from repro.segserve.adaptive import (
 GAIN_FLOOR = 2.0**-12
 
 
+def _hash_arrays(h, arrays) -> None:
+    for leaf in arrays:
+        a = np.asarray(leaf)
+        h.update(str((a.shape, str(a.dtype))).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+
+
+def params_fingerprint(params) -> str:
+    """SHA-256 over the exact served weights alone — the half of a plan's
+    binding a serving gateway can re-derive at admission time (it holds the
+    params but not the calibration inputs), so a plan tuned against
+    different weights is detectable before a single request runs on it."""
+    h = hashlib.sha256()
+    _hash_arrays(h, jax.tree.leaves(params))
+    return h.hexdigest()
+
+
 def fingerprint(params, images, **knobs) -> str:
     """SHA-256 over the exact weights, calibration inputs and knobs a plan
     was derived from — byte-level, so any drift invalidates the plan."""
     h = hashlib.sha256()
-    for leaf in jax.tree.leaves(params):
-        a = np.asarray(leaf)
-        h.update(str((a.shape, str(a.dtype))).encode())
-        h.update(np.ascontiguousarray(a).tobytes())
-    for im in images:
-        a = np.asarray(im)
-        h.update(str((a.shape, str(a.dtype))).encode())
-        h.update(np.ascontiguousarray(a).tobytes())
+    _hash_arrays(h, jax.tree.leaves(params))
+    _hash_arrays(h, images)
     h.update(repr(sorted((k, repr(v)) for k, v in knobs.items())).encode())
     return h.hexdigest()
 

@@ -16,7 +16,11 @@ operating point, plus the evidence that made the point trustworthy:
     bound (``unet.forward_with_error_bound`` extended per tile) — sound
     unconditionally but loose, recorded for transparency;
   * a ``fingerprint`` binding the plan to the exact weights, calibration
-    inputs and knobs it was derived from, so a stale plan is detectable.
+    inputs and knobs it was derived from, so a stale plan is detectable —
+    plus a ``params_fingerprint`` over the weights alone, the half a
+    serving gateway can re-derive at admission time (it holds the served
+    params but not the calibration set) to reject or quarantine a plan
+    tuned against different weights (``repro.serve.gateway``).
 
 Plans round-trip losslessly through JSON (``to_json`` / ``from_json``) and
 persist with the checkpoint module's crash-safety discipline
@@ -29,7 +33,10 @@ from dataclasses import asdict, dataclass, field
 from repro.core.bitplane import N_BITS
 from repro.core.plane_schedule import PlaneSchedule
 
-PLAN_VERSION = 1
+# v2: + params_fingerprint (weights-only binding, verified at gateway
+# admission).  v1 plans load with it as None — unverifiable, so the gateway
+# treats them as stale.
+PLAN_VERSION = 2
 
 
 def _opt_tuple(v, conv=float):
@@ -53,6 +60,7 @@ class TunedPlan:
     target_rel_err: float
     certificate: dict
     fingerprint: str
+    params_fingerprint: str | None = None
     layer_bounds: tuple[float, ...] | None = None
     tile: int | None = None
     halo: int | None = None
@@ -167,6 +175,10 @@ class TunedPlan:
             target_rel_err=float(d["target_rel_err"]),
             certificate=dict(d["certificate"]),
             fingerprint=str(d["fingerprint"]),
+            params_fingerprint=(
+                None if d.get("params_fingerprint") is None
+                else str(d["params_fingerprint"])
+            ),
             layer_bounds=_opt_tuple(d.get("layer_bounds")),
             tile=None if d.get("tile") is None else int(d["tile"]),
             halo=None if d.get("halo") is None else int(d["halo"]),

@@ -104,6 +104,79 @@ def greedy_schedule(
     return tuple(planes)
 
 
+def repair_sequence(planes, sensitivity, cap: int) -> list[int]:
+    """The deterministic order repair re-adds planes in: repeatedly the
+    fixable layer whose measured sensitivity contribution is largest (the
+    dominant error source), exactly the rule the one-at-a-time loop used.
+    Returns the layer index per step; applying a prefix of length ``t``
+    gives the plane vector after ``t`` repairs."""
+    p = list(planes)
+    seq: list[int] = []
+    while len(seq) < cap:
+        worst = max(
+            (l for l in range(len(p)) if p[l] < N_BITS),
+            key=lambda l: sensitivity[l][p[l] - 1],
+            default=None,
+        )
+        if worst is None:
+            break
+        p[worst] += 1
+        seq.append(worst)
+    return seq
+
+
+def bisect_repair(measure, seq_len: int, budget: float):
+    """Fewest repair steps whose measured error fits ``budget``, amortized.
+
+    ``measure(t) -> float`` serves the calibration set at the plane vector
+    after ``t`` repair steps — the expensive call (a full engine replay per
+    invocation).  The one-at-a-time loop paid ``t* + 1`` measurements for a
+    repair depth of ``t*``; this gallops (probe 1, 2, 4, ... until the
+    error fits) and then bisects the bracketed interval, so deep repairs
+    cost ``O(log t*)`` measurements while shallow ones (``t* <= 2``, the
+    common case) pay exactly what the linear scan did.  Assumes error is
+    non-increasing in repair depth — the same assumption the linear loop
+    made; a non-monotone landscape still terminates at a *valid* certified
+    point (the certificate is built from the measurement at the served
+    vector), it just may not be the minimal one.
+
+    Returns ``(t, measured_at_t, n_measure_calls)``.  When even the full
+    sequence fails the budget the full depth is returned (the caller's cap
+    semantics: serve the best achievable point, certificate records the
+    miss).
+    """
+    calls = 0
+
+    def m(t: int) -> float:
+        nonlocal calls
+        calls += 1
+        return measure(t)
+
+    got = m(0)
+    if got <= budget or seq_len == 0:
+        return 0, got, calls
+    lo = 0  # known to fail
+    t = 1
+    while True:
+        t = min(t, seq_len)
+        got = m(t)
+        if got <= budget:
+            hi, m_hi = t, got
+            break
+        lo = t
+        if t == seq_len:
+            return seq_len, got, calls
+        t *= 2
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        got = m(mid)
+        if got <= budget:
+            hi, m_hi = mid, got
+        else:
+            lo = mid
+    return hi, m_hi, calls
+
+
 def tile_candidates(cfg, images, *, limit: int = 8) -> tuple[int, ...]:
     """Viable core strides for ``images`` under ``cfg``'s geometry: multiples
     of ``2**depth`` from the minimum viable tile (the halo-walk guard) up to

@@ -231,6 +231,63 @@ def unet_window_cycles(
     )
 
 
+# ---- LM decode pricing (admission-control estimates) -----------------------
+#
+# The serving gateway co-schedules LM decode and segmentation against one
+# modeled cycle budget, so it needs LM work in the same relation-(2)
+# currency.  A decode step's block matmuls are priced as 1x1 "convolutions"
+# (h = w = 1, k = 1 — relation (3) then counts exactly ceil(cout/T_M) output
+# tiles of a plain matvec): 4 attention projections (q, k, v, o) plus the
+# two FFN matmuls per block.  This is an admission *estimate* — attention
+# score/value products and family quirks (GQA, MoE routing, ssm scans) are
+# not itemized — but it scales correctly with width, depth and the
+# installed per-layer plane schedule, which is all a scheduler needs.
+
+
+def lm_block_layers(d_model: int, d_ff: int) -> list[ConvLayerSpec]:
+    """One transformer block's decode-step matmuls as 1x1-conv specs."""
+    proj = ConvLayerSpec(1, 1, d_model, d_model, k=1, pad=0)
+    return [
+        proj, proj, proj, proj,  # wq, wk, wv, wo
+        ConvLayerSpec(1, 1, d_model, d_ff, k=1, pad=0),
+        ConvLayerSpec(1, 1, d_ff, d_model, k=1, pad=0),
+    ]
+
+
+@functools.lru_cache(maxsize=4096)
+def _lm_step_cycles_cached(
+    d_model: int, d_ff: int, n_layers: int, planes: tuple[int, ...],
+    mode: str,
+) -> int:
+    total = 0
+    for l in range(n_layers):
+        tc = schedule_tile_cycles(_planes_for(planes, l), mode=mode)
+        total += sum(
+            spec.cycles(tile_cycles=tc) for spec in lm_block_layers(d_model, d_ff)
+        )
+    return total
+
+
+def lm_step_cycles(
+    d_model: int, d_ff: int, n_layers: int, schedule=None, *,
+    mode: str = "pipelined",
+) -> int:
+    """Relation-(2) cycles of one decode step (one token, one sequence)
+    through an ``n_layers`` block stack under a per-layer plane schedule
+    (``None`` = full ``N_BITS`` digits everywhere), memoized on the
+    signature like :func:`unet_window_cycles`."""
+    planes = (
+        (N_BITS,) * n_layers if schedule is None
+        else tuple(int(b) for b in schedule)
+    )
+    return _lm_step_cycles_cached(d_model, d_ff, n_layers, planes, mode)
+
+
+def lm_step_ops(d_model: int, d_ff: int, n_layers: int) -> int:
+    """Useful MAC ops of one decode step (same itemization as the cycles)."""
+    return n_layers * sum(l.ops() for l in lm_block_layers(d_model, d_ff))
+
+
 @dataclass
 class PlatformRow:
     """One column of Table 1.  Derived metrics follow the paper's

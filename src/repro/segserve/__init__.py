@@ -16,5 +16,5 @@
 """
 from . import adaptive, engine, synth, tiling  # noqa: F401
 from .adaptive import budget_class_from_thresholds  # noqa: F401
-from .engine import SegEngine, SegRequest, SegResult  # noqa: F401
+from .engine import SegEngine, SegRequest, SegResult, TileEvent  # noqa: F401
 from .tiling import halo_for, plan_tiles, stitch, tiled_forward  # noqa: F401

@@ -93,6 +93,28 @@ class SegResult:
         return _IMPLIED_POWER_W * self.time_ms
 
 
+@dataclass(frozen=True)
+class TileEvent:
+    """One emitted tile: the progressive-display unit of the streaming API.
+
+    Under priority scheduling the engine emits an image's structure-class
+    tiles (low ``klass`` — full-amplitude, many-plane regions) before its
+    background tiles, so a caller consuming events sees the clinically
+    interesting content first; ``request.partial()`` is the stitch so far.
+    ``cycles`` is the tile's relation-(2) price at its class schedule — the
+    currency the serving gateway charges micro-batches against its round
+    budget in.
+    """
+
+    rid: int
+    tile: int  # index into request.plan.tiles
+    klass: int  # budget class (0 = structure / full amplitude)
+    cycles: int
+    core: tuple[int, int, int, int]  # (y0, x0, y1, x1) canvas coords
+    done: bool  # this emission completed the request
+    request: "SegRequest"
+
+
 @dataclass
 class SegRequest:
     rid: int
@@ -106,11 +128,23 @@ class SegRequest:
     cycles: int = 0
     ops: int = 0
     class_counts: dict[int, int] = field(default_factory=dict)
+    emitted: list[int] = field(default_factory=list)  # tile emission order
     result: SegResult | None = None
 
     @property
     def done(self) -> bool:
         return self.result is not None
+
+    def partial(self) -> np.ndarray:
+        """The progressive stitch so far: emitted cores hold their final
+        logits (stitching is a disjoint scatter, so early tiles are exact),
+        unemitted cores are zero.  After completion this is the final
+        result's logits."""
+        if self.result is not None:
+            return self.result.logits
+        if self.canvas_out is None:
+            raise ValueError(f"request {self.rid} not yet admitted")
+        return self.canvas_out[: self.plan.h, : self.plan.w].copy()
 
 
 class SegEngine:
@@ -137,6 +171,20 @@ class SegEngine:
         measured-ratio refined schedule, and switches the quantized
         datapath to per-tile activation scales so the plan's certificate
         transfers to the batched path exactly.
+      priority: prefill-style tile prioritization — pick the pending
+        micro-batch group with the *lowest* budget class first (structure
+        before background), so progressive consumers (:class:`TileEvent`
+        stream, ``SegRequest.partial``) see the high-information regions
+        early.  Scheduling order only: group membership and within-group
+        packing are fixed at admission, so the final stitch is
+        bit-identical to the ``priority=False`` (admission-order) path
+        whenever numerics are batch-composition independent — always under
+        a tuned ``plan`` (per-tile quantization) or the float datapath,
+        and on the batch-shared-scale quantized path whenever the
+        admission sequence itself is unchanged (e.g. requests <=
+        ``max_active``).  With shared scales *and* slot churn, reordering
+        can shift which requests' same-key tiles share a batch, which
+        legitimately moves low-bit rounding.
     """
 
     def __init__(
@@ -151,6 +199,7 @@ class SegEngine:
         adaptive: bool = True,
         max_class: int = adaptive.MAX_CLASS,
         plan=None,
+        priority: bool = True,
     ):
         self.cfg = cfg
         self.params = params
@@ -181,6 +230,7 @@ class SegEngine:
         self.tile = tile
         self.halo = halo
         self.batch = batch
+        self.priority = priority
         quantized = cfg.quant_mode == "mma_int8"
         self.adaptive = adaptive and quantized and (
             plan is None or plan.class_thresholds is not None
@@ -294,11 +344,24 @@ class SegEngine:
 
     # ------------------------------------------------------------- stepping
 
-    def step(self) -> bool:
-        """Run one micro-batch (oldest group first); False when idle."""
+    def step(self) -> list[TileEvent]:
+        """Run one micro-batch and return its tile emissions (empty when
+        idle — falsy, so boolean call sites keep working).
+
+        Group choice is the prioritization point: structure-first (lowest
+        budget class; FIFO among equals via dict insertion order) under
+        ``priority=True``, plain admission order otherwise.  Only *which*
+        group runs next changes — group membership and within-group batch
+        packing are fixed at admission — so emission order is scheduling
+        policy, not numerics (see the ``priority`` docstring for the one
+        shared-scale caveat under slot churn).
+        """
         if not self._tasks:
-            return False
-        key = next(iter(self._tasks))
+            return []
+        if self.priority:
+            key = min(self._tasks, key=lambda g: g[2])
+        else:
+            key = next(iter(self._tasks))
         group = self._tasks[key]
         taken, self._tasks[key] = group[: self.batch], group[self.batch :]
         if not self._tasks[key]:
@@ -309,17 +372,29 @@ class SegEngine:
             spec = req.plan.tiles[ti]
             x[b] = req.canvas_in[spec.y0 : spec.y1, spec.x0 : spec.x1]
         out = np.asarray(self._fwd(self.params, jnp.asarray(x), self.class_cfg(k)))
+        events: list[TileEvent] = []
+        cyc = self._tile_cycles(in_h, in_w, k)  # one price, both accounts
         for b, (req, ti) in enumerate(taken):
             spec = req.plan.tiles[ti]
             cy, cx = spec.crop
             req.canvas_out[
                 spec.core_y0 : spec.core_y1, spec.core_x0 : spec.core_x1
             ] = out[b][cy, cx]
-            req.cycles += self._tile_cycles(in_h, in_w, k)
+            req.cycles += cyc
             req.remaining -= 1
+            req.emitted.append(ti)
             if req.remaining == 0:
                 self._finish(req)
-        return True
+            events.append(
+                TileEvent(
+                    rid=req.rid, tile=ti, klass=k, cycles=cyc,
+                    core=(
+                        spec.core_y0, spec.core_x0, spec.core_y1, spec.core_x1
+                    ),
+                    done=req.done, request=req,
+                )
+            )
+        return events
 
     def _finish(self, req: SegRequest) -> None:
         req.result = SegResult(
@@ -342,8 +417,23 @@ class SegEngine:
         return [r.result for r in reqs]
 
     def flush(self) -> None:
-        """Drain the queue and every in-flight request."""
+        """Drain the queue and every in-flight request (the event-less
+        view of :meth:`serve_stream` — one loop, two surfaces)."""
+        for _ in self.serve_stream([]):
+            pass
+
+    def serve_stream(self, images: list[np.ndarray]):
+        """Progressive serving: yield :class:`TileEvent` s as tiles finish.
+
+        Under ``priority=True`` each image's structure-class tiles stream
+        out before its background tiles; consume ``event.request.partial()``
+        for the stitch so far and ``event.request.result`` once
+        ``event.done``.  Equivalent to :meth:`run` in final outputs."""
+        for im in images:
+            self.submit(im)
         while self.queue or self.slots.any_active() or self._tasks:
             self.queue.pump(self.slots, self._admit)
-            if not self.step() and not self.queue:
+            events = self.step()
+            if not events and not self.queue:
                 break
+            yield from events

@@ -1,8 +1,25 @@
-"""Serving front door: shared queue/slot primitives plus the two engines —
-LM decode (``serve.engine.Engine``) and tiled segmentation
-(``repro.segserve.engine.SegEngine``, re-exported lazily as ``SegEngine``
-so importing one workload never pays for the other)."""
-from . import engine, queue, serve_step  # noqa: F401
+"""Serving front door.
+
+:class:`~repro.serve.gateway.Gateway` is the deployment entry point: one
+admission-controlled queue fronting both engines — LM decode
+(``serve.engine.Engine``) and tiled segmentation
+(``repro.segserve.engine.SegEngine``) — co-scheduled against a shared
+modeled cycle budget under a pluggable policy (FIFO / cycle-budget
+fair-share / EDF), with tuned-plan fingerprint verification at admission
+and progressive tile streaming.  The engines and the shared queue/slot
+primitives stay importable directly for single-workload use.  Heavy
+engine imports (jax, models) are deferred until an adapter is built;
+``SegEngine`` re-exports lazily so importing one workload never pays for
+the other.
+"""
+from . import engine, gateway, queue, serve_step  # noqa: F401
+from .gateway import (  # noqa: F401
+    Gateway,
+    GatewayRequest,
+    LMAdapter,
+    SegAdapter,
+    StalePlanError,
+)
 from .queue import FifoQueue, SlotTable  # noqa: F401
 
 

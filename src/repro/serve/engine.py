@@ -143,11 +143,15 @@ class Engine:
         req._last_logits = np.asarray(logits[slot, -1])  # type: ignore[attr-defined]
         return True
 
-    def step(self) -> None:
-        """One continuous-batching decode step for all active slots."""
+    def step(self) -> list[Request]:
+        """One continuous-batching decode step for all active slots;
+        returns the requests that completed on this step (empty when idle
+        — falsy, so boolean call sites keep working).  The gateway's LM
+        adapter consumes the completions to stamp modeled-clock finish
+        times without re-scanning the slot table."""
         active = self.slots.active()
         if not active:
-            return
+            return []
         toks = np.zeros((self.batch, 1), np.int32)
         for i, req in active:
             last = getattr(req, "_last_logits")
@@ -165,6 +169,7 @@ class Engine:
             self.params, jnp.asarray(toks), self.cache, jnp.int32(idx),
             self.extras,
         )
+        completed: list[Request] = []
         for i, req in active:
             tok = int(np.argmax(np.asarray(logits[i, -1])))
             req.out.append(tok)
@@ -173,14 +178,18 @@ class Engine:
             if len(req.out) >= req.max_new or self.lengths[i] >= self.max_seq - 1:
                 req.done = True
                 self.slots.release(i)
+                completed.append(req)
+        return completed
 
     def run(self, requests: list[Request]) -> list[Request]:
+        """Serve ``requests`` to completion standalone (the engine owning
+        its own FIFO loop).  Deployments serving heterogeneous traffic
+        front this engine with :class:`repro.serve.gateway.Gateway`
+        instead, which owns admission and drives ``admit``/``step``
+        directly against a shared cycle budget."""
         pending: FifoQueue[Request] = FifoQueue(requests)
         done: list[Request] = []
         while pending or self.slots.any_active():
             pending.pump(self.slots, self.admit)
-            self.step()
-            for r in requests:
-                if r.done and r not in done:
-                    done.append(r)
+            done.extend(self.step())
         return done

@@ -1,0 +1,704 @@
+"""Unified admission-controlled serving gateway: one front door for both
+engines, co-scheduled against a shared modeled cycle budget.
+
+The LM Engine (``serve.engine``) and SegEngine (``segserve.engine``) each
+own a correct inner loop over the shared ``serve.queue`` primitives, but a
+deployment serving heterogeneous traffic needs a *single* admission point
+that can (1) decide which request enters which engine when, (2) split the
+accelerator's modeled cycle capacity between the two workloads each
+scheduling round, and (3) refuse to serve a tuned plan whose weights have
+drifted.  This module is that front door.
+
+Scheduling model
+----------------
+Time is the relation-(2) cycle clock of ``core.cycle_model`` — the same
+currency every bench and certificate in this repo is priced in.  The
+gateway runs discrete *rounds* of ``round_budget`` modeled cycles.  Each
+round: the admission policy moves requests from the gateway queue into
+engine slots, then the execution policy spends the round's budget stepping
+the engines' micro-batches (one LM continuous-batching decode step / one
+seg tile micro-batch at a time, charged at its modeled price).  Three
+policies ship:
+
+``fifo``
+    Strict arrival order, head-of-line blocking and all: admission stops
+    at the first request whose engine is full, execution drains the class
+    of the oldest incomplete request first.  The honest baseline.
+``fair``
+    Cycle-budget fair-share (deficit round-robin): each traffic class
+    accrues ``share * round_budget`` cycles of quantum per round (deficit
+    carries over while the class has work, resets while idle), admission
+    interleaves classes oldest-first, and leftover budget is
+    work-conserving.  No class can starve: a backlogged class receives at
+    least its share of every round.
+``edf``
+    Earliest-deadline-first on the modeled clock, deadlines defaulting to
+    ``deadline_factor x`` the request's admission estimate.  Admission and
+    execution both follow the earliest live deadline.
+
+Plan invalidation at admission
+------------------------------
+An adapter serving a :class:`~repro.autotune.plan.TunedPlan` carries the
+plan's ``params_fingerprint`` next to a fingerprint of the weights it is
+*actually* serving.  Every submission re-checks the pair; on mismatch the
+gateway either rejects the request with :class:`StalePlanError` (naming
+both fingerprints) or — ``on_stale='fallback'`` — quarantines the plan and
+rebuilds the engine on the certified uniform schedule (full 8-plane
+digits, zero truncation error) before admitting.  A certificate conditioned
+on dead weights is never silently served.
+
+Progressive results
+-------------------
+Segmentation work streams :class:`~repro.segserve.engine.TileEvent` s
+through the gateway (``on_event`` / ``Gateway.tile_events``): with the
+engine's structure-first tile prioritization, callers get the
+high-information cores of an image while its background is still queued.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+from repro.core import cycle_model as cm
+
+from .queue import FifoQueue
+
+POLICIES = ("fifo", "fair", "edf")
+_POLICY_ALIASES = {"fair_share": "fair", "fairshare": "fair"}
+
+
+class StalePlanError(RuntimeError):
+    """A tuned plan's fingerprint does not match the served params."""
+
+
+def _check_plan(adapter, on_stale: str) -> None:
+    """The admission-time plan-invalidation gate (ROADMAP item): verify the
+    served plan's weights-only fingerprint against the weights the adapter
+    actually holds, once per submission."""
+    info = adapter.verify_info()
+    if info is None:
+        return
+    plan_fp, served_fp = info
+    if plan_fp == served_fp:
+        return
+    msg = (
+        f"stale tuned plan on {adapter.kind!r}: plan was tuned for params "
+        f"with fingerprint {plan_fp} but the engine serves params with "
+        f"fingerprint {served_fp}; refusing to serve a certificate "
+        f"conditioned on different weights"
+    )
+    if on_stale == "reject":
+        raise StalePlanError(msg)
+    adapter.install_fallback(msg)
+
+
+def _verify_info(adapter):
+    """The cached (plan binding, served binding) fingerprint pair for an
+    adapter serving a tuned plan.  The served weights are fixed for the
+    adapter's lifetime, so the SHA-256 over them is computed once and
+    reused by every admission check — the per-submission work is a string
+    compare."""
+    if adapter.plan is None:
+        return None
+    if getattr(adapter, "_served_fp", None) is None:
+        from repro.autotune.calibrate import params_fingerprint
+
+        adapter._served_fp = params_fingerprint(adapter.params)
+    plan_fp = adapter.plan.params_fingerprint or (
+        f"<unverifiable v1 plan {adapter.plan.fingerprint}>"
+    )
+    return plan_fp, adapter._served_fp
+
+
+@dataclass
+class GatewayRequest:
+    """One typed request with its modeled-clock lifecycle timestamps."""
+
+    rid: int
+    kind: str  # adapter key: 'lm' | 'seg' | ...
+    payload: Any  # engine-native request (serve.engine.Request / image)
+    est_cycles: int  # relation-(2) admission estimate
+    deadline: int | None  # absolute modeled-cycle deadline (EDF)
+    arrival: int  # modeled clock at submit
+    admitted: int | None = None  # modeled clock at admission
+    finished: int | None = None  # modeled clock at completion
+    arrival_round: int = 0
+    admitted_round: int | None = None
+    finished_round: int | None = None
+    handle: Any = None  # engine-side request object, set at admission
+
+    @property
+    def done(self) -> bool:
+        return self.finished is not None
+
+    @property
+    def latency_cycles(self) -> int:
+        if self.finished is None:
+            raise ValueError(f"request {self.rid} not finished")
+        return self.finished - self.arrival
+
+    @property
+    def latency_ms(self) -> float:
+        return self.latency_cycles / cm.FREQ_HZ * 1e3
+
+
+# --------------------------------------------------------------- adapters
+#
+# An adapter owns one engine and speaks the gateway's protocol:
+#   kind            class name ('lm', 'seg')
+#   free_slots()    admission headroom
+#   estimate_cycles(payload)  relation-(2) cost estimate for admission
+#   admit(greq)     occupy a slot; returns cycles charged up front (prefill)
+#   has_work()      admitted-but-unfinished micro-work pending
+#   work(budget)    run micro-steps until ~budget cycles are consumed;
+#                   returns (consumed, completed GatewayRequests, events)
+#   total_ops       useful-op account for aggregate GOPS/W
+#   verify_info()   None, or (plan params fingerprint, served fingerprint)
+#   install_fallback(reason)  drop a stale plan for the uniform schedule
+#
+# The gateway itself never touches jax: policies are pure cycle-clock
+# scheduling, so tests drive them with synthetic adapters at zero model
+# cost and the property suite can sweep traffic shapes.
+
+
+class LMAdapter:
+    """Continuous-batching LM decode behind the gateway protocol.
+
+    ``plan`` (a ``workload='lm'`` :class:`~repro.autotune.plan.TunedPlan`)
+    installs the certified per-layer schedule via
+    :func:`repro.autotune.api.apply_plan_lm` and arms the admission-time
+    fingerprint check.  Decode work is priced per continuous-batching step:
+    ``cm.lm_step_cycles`` x active slots; prefill is charged at admission
+    (prompt length x step price).
+    """
+
+    kind = "lm"
+
+    def __init__(self, cfg, params, *, batch: int, max_seq: int,
+                 plan=None, extras=None):
+        self.plan = plan
+        self.params = params
+        self._base_cfg = cfg
+        self._batch = batch
+        self._max_seq = max_seq
+        self._extras = extras
+        self.fallback_reason: str | None = None
+        if plan is not None:
+            from repro.autotune.api import apply_plan_lm
+
+            cfg = apply_plan_lm(cfg, plan)
+        self._build(cfg)
+        # keyed by handle identity: pre-built Requests keep their own rid,
+        # which need not match (or may collide with) the gateway's counter
+        self._inflight: dict[int, GatewayRequest] = {}
+        self.total_ops = 0
+
+    def _build(self, cfg) -> None:
+        from .engine import Engine
+
+        self.cfg = cfg
+        self.engine = Engine(
+            cfg, self.params, batch=self._batch, max_seq=self._max_seq,
+            extras=self._extras,
+        )
+        schedule = cfg.quant.plane_schedule
+        self._step_cycles = cm.lm_step_cycles(
+            cfg.d_model, cfg.d_ff, cfg.n_layers, schedule
+        )
+        self._step_ops = cm.lm_step_ops(cfg.d_model, cfg.d_ff, cfg.n_layers)
+
+    # -- plan invalidation
+    def verify_info(self):
+        return _verify_info(self)
+
+    def install_fallback(self, reason: str) -> None:
+        """Quarantine the stale plan: rebuild on the uniform full-digit
+        schedule (certified by construction — zero truncation error)."""
+        import dataclasses
+
+        self.plan = None
+        self.fallback_reason = reason
+        self._build(
+            self._base_cfg.replace(
+                quant=dataclasses.replace(
+                    self._base_cfg.quant, plane_schedule=None, planes=8
+                )
+            )
+        )
+
+    # -- gateway protocol
+    def prepare(self, payload, *, rid: int, max_new: int = 16):
+        import numpy as np
+
+        from .engine import Request
+
+        if isinstance(payload, Request):
+            return payload
+        return Request(rid=rid, prompt=np.asarray(payload), max_new=max_new)
+
+    def free_slots(self) -> int:
+        return self.engine.slots.free_count()
+
+    def estimate_cycles(self, payload) -> int:
+        return (len(payload.prompt) + payload.max_new) * self._step_cycles
+
+    def admit(self, greq: GatewayRequest) -> int:
+        if not self.engine.admit(greq.payload):
+            raise RuntimeError("admit called with no free LM slot")
+        greq.handle = greq.payload
+        self._inflight[id(greq.handle)] = greq
+        n_prefill = len(greq.payload.prompt)
+        self.total_ops += n_prefill * self._step_ops
+        return n_prefill * self._step_cycles
+
+    def has_work(self) -> bool:
+        return self.engine.slots.any_active()
+
+    def work(self, budget: int):
+        consumed = 0
+        completed: list[GatewayRequest] = []
+        while consumed < budget:
+            n_active = len(self.engine.slots.active())
+            if n_active == 0:
+                break
+            finished = self.engine.step()
+            consumed += self._step_cycles * n_active
+            self.total_ops += self._step_ops * n_active
+            completed.extend(
+                self._inflight.pop(id(r))
+                for r in finished
+                if id(r) in self._inflight
+            )
+        return consumed, completed, []
+
+
+class SegAdapter:
+    """Tiled segmentation behind the gateway protocol.
+
+    ``plan`` serves a tuned operating point through
+    :func:`repro.autotune.api.engine_from_plan` semantics and arms the
+    fingerprint check; without one the engine serves ``cfg`` as given.
+    Work is the engine's own micro-batch step, charged at the summed
+    relation-(2) price of the tiles it emitted; emitted
+    :class:`~repro.segserve.engine.TileEvent` s pass through to the
+    gateway's progressive stream.
+    """
+
+    kind = "seg"
+
+    def __init__(self, cfg, params, *, plan=None, **engine_kw):
+        self.plan = plan
+        self.params = params
+        self._base_cfg = cfg
+        self._engine_kw = dict(engine_kw)
+        self.fallback_reason: str | None = None
+        self._build(cfg, plan)
+        self._inflight: dict[int, GatewayRequest] = {}
+        self.total_ops = 0
+
+    def _build(self, cfg, plan) -> None:
+        from repro.segserve.engine import SegEngine
+
+        if plan is not None:
+            from repro.autotune.api import apply_plan
+
+            cfg = apply_plan(cfg, plan)
+        self.cfg = cfg
+        self.engine = SegEngine(cfg, self.params, plan=plan, **self._engine_kw)
+        self._base_planes = tuple(self.engine._class_planes(0))
+
+    # -- plan invalidation
+    def verify_info(self):
+        return _verify_info(self)
+
+    def install_fallback(self, reason: str) -> None:
+        import dataclasses
+
+        self.plan = None
+        self.fallback_reason = reason
+        kw = dict(self._engine_kw)
+        # the stale plan owned the tile geometry; fall back to the smallest
+        # stride the halo walk certifies viable for this net
+        kw.setdefault("tile", self._base_cfg.min_viable_tile())
+        self._engine_kw = kw
+        self._build(
+            dataclasses.replace(
+                self._base_cfg, plane_schedule=None, planes=8
+            ),
+            None,
+        )
+
+    # -- gateway protocol
+    def prepare(self, payload, *, rid: int):
+        import numpy as np
+
+        return np.asarray(payload)
+
+    def free_slots(self) -> int:
+        return self.engine.slots.free_count()
+
+    def estimate_cycles(self, payload) -> int:
+        """Upper admission estimate: every tile window priced at the
+        class-0 (full-budget) schedule — adaptivity only lowers it."""
+        from repro.segserve import tiling
+
+        e = self.engine
+        tplan = tiling.plan_tiles(
+            payload.shape[0], payload.shape[1], depth=e.cfg.depth,
+            convs_per_stage=e.cfg.convs_per_stage, tile=e.tile, halo=e.halo,
+        )
+        return sum(
+            cm.unet_window_cycles(
+                spec.in_shape, e.cfg.in_ch, e.cfg.base, e.cfg.depth,
+                e.cfg.convs_per_stage, self._base_planes,
+            )
+            for spec in tplan.tiles
+        )
+
+    def admit(self, greq: GatewayRequest) -> int:
+        handle = self.engine.submit(greq.payload)
+        if not self.engine.queue.pump(self.engine.slots, self.engine._admit):
+            raise RuntimeError("admit called with no free seg slot")
+        greq.handle = handle
+        # keyed by the engine-local rid the TileEvents will carry
+        self._inflight[handle.rid] = greq
+        return 0  # tile planning is host work, not accelerator cycles
+
+    def has_work(self) -> bool:
+        return bool(self.engine._tasks)
+
+    def work(self, budget: int):
+        consumed = 0
+        completed: list[GatewayRequest] = []
+        events = []
+        while consumed < budget and self.engine._tasks:
+            evs = self.engine.step()
+            for ev in evs:
+                consumed += ev.cycles
+                if ev.done:
+                    greq = self._inflight.pop(ev.rid, None)
+                    if greq is not None:
+                        self.total_ops += ev.request.result.ops
+                        completed.append(greq)
+            events.extend(evs)
+        return consumed, completed, events
+
+
+# ---------------------------------------------------------------- gateway
+
+
+class Gateway:
+    """Admission-controlled front door over a set of engine adapters.
+
+    Args:
+      adapters: the served engines, e.g. ``[LMAdapter(...), SegAdapter(...)]``
+        (or any object speaking the adapter protocol — tests use synthetic
+        ones).  Keyed by ``adapter.kind``.
+      policy: ``'fifo' | 'fair' | 'edf'`` (see module docstring).
+      round_budget: modeled cycles one scheduling round may spend across
+        all engines — the co-scheduling knob.
+      shares: per-kind fair-share fractions (default: equal).  Must sum
+        to <= 1; unallocated share is work-conserving slack.
+      on_stale: ``'reject'`` (raise :class:`StalePlanError` at submission)
+        or ``'fallback'`` (quarantine the plan, serve the uniform
+        schedule) when a tuned plan's fingerprint mismatches the served
+        params.
+      deadline_factor: default EDF deadline = admission estimate x this.
+      on_event: optional callback fed every streamed
+        :class:`~repro.segserve.engine.TileEvent` (progressive display).
+    """
+
+    def __init__(
+        self,
+        adapters,
+        *,
+        policy: str = "fair",
+        round_budget: int = 1_000_000,
+        shares: dict[str, float] | None = None,
+        on_stale: str = "reject",
+        deadline_factor: float = 4.0,
+        on_event=None,
+    ):
+        policy = _POLICY_ALIASES.get(policy, policy)
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        if round_budget < 1:
+            raise ValueError(f"round_budget {round_budget} < 1")
+        if on_stale not in ("reject", "fallback"):
+            raise ValueError(f"on_stale {on_stale!r}: 'reject' or 'fallback'")
+        self.adapters: dict[str, Any] = {a.kind: a for a in adapters}
+        if not self.adapters:
+            raise ValueError("gateway needs at least one adapter")
+        self.policy = policy
+        self.round_budget = int(round_budget)
+        self.on_stale = on_stale
+        self.deadline_factor = float(deadline_factor)
+        self.on_event = on_event
+        kinds = list(self.adapters)
+        if shares is None:
+            shares = {k: 1.0 / len(kinds) for k in kinds}
+        unknown = set(shares) - set(kinds)
+        if unknown:
+            raise ValueError(f"shares for unknown kinds {sorted(unknown)}")
+        missing = set(kinds) - set(shares)
+        if missing:
+            # a silently share-less class would void the starvation-freedom
+            # guarantee the fair policy exists for
+            raise ValueError(
+                f"explicit shares must cover every served kind; missing "
+                f"{sorted(missing)}"
+            )
+        if any(s <= 0 for s in shares.values()) or sum(shares.values()) > 1 + 1e-9:
+            raise ValueError(f"shares must be positive and sum <= 1: {shares}")
+        self.shares = dict(shares)
+        self.queue: FifoQueue[GatewayRequest] = FifoQueue()
+        self.requests: list[GatewayRequest] = []
+        self._live: dict[int, GatewayRequest] = {}  # admitted, unfinished
+        # NOTE: grows for the life of the gateway (one small record per
+        # emitted tile); long-running consumers should pass on_event and
+        # clear this list between reporting windows.
+        self.tile_events: list = []
+        self.clock = 0  # modeled cycles
+        self.rounds = 0
+        self._deficit = {k: 0.0 for k in kinds}
+        self._admit_charges = {k: 0 for k in kinds}
+        self._next_rid = 0
+
+    # ------------------------------------------------------------- submit
+
+    def submit(self, kind: str, payload, *, deadline_cycles: int | None = None,
+               **prepare_kw) -> GatewayRequest:
+        """Type, verify and enqueue one request.
+
+        Admission control starts here: the adapter's tuned plan (if any)
+        is verified against its served params *before* the request may
+        enter the system — a stale certificate rejects (or falls back)
+        now, not after cycles were spent.
+        """
+        if kind not in self.adapters:
+            raise ValueError(
+                f"unknown request kind {kind!r}; served kinds: "
+                f"{sorted(self.adapters)}"
+            )
+        adapter = self.adapters[kind]
+        _check_plan(adapter, self.on_stale)
+        rid = self._next_rid
+        self._next_rid += 1
+        payload = adapter.prepare(payload, rid=rid, **prepare_kw)
+        est = int(adapter.estimate_cycles(payload))
+        if deadline_cycles is None:
+            deadline = self.clock + math.ceil(self.deadline_factor * est)
+        else:
+            deadline = self.clock + int(deadline_cycles)
+        greq = GatewayRequest(
+            rid=rid, kind=kind, payload=payload, est_cycles=est,
+            deadline=deadline, arrival=self.clock,
+            arrival_round=self.rounds,
+        )
+        self.queue.push(greq)
+        self.requests.append(greq)
+        return greq
+
+    # ---------------------------------------------------------- admission
+
+    def _try_admit(self, idx: int) -> bool:
+        """Admit the ``idx``-th queued request if its engine has a slot."""
+        greq = self.queue.peek(idx)
+        adapter = self.adapters[greq.kind]
+        if adapter.free_slots() < 1:
+            return False
+        self.queue.pop_at(idx)
+        charged = adapter.admit(greq)
+        greq.admitted = self.clock
+        greq.admitted_round = self.rounds
+        self._live[greq.rid] = greq
+        self._admit_charges[greq.kind] += int(charged)
+        return True
+
+    def _admission_phase(self) -> None:
+        if self.policy == "fifo":
+            # strict arrival order: a full engine at the head blocks the
+            # whole queue (the classic failure mode the other policies fix)
+            while self.queue and self._try_admit(0):
+                pass
+        elif self.policy == "fair":
+            # round-robin classes, oldest-first within a class; a blocked
+            # class never blocks the others
+            progress = True
+            while progress and self.queue:
+                progress = False
+                for kind in self.adapters:
+                    idx = next(
+                        (i for i, g in enumerate(self.queue) if g.kind == kind),
+                        None,
+                    )
+                    if idx is not None and self._try_admit(idx):
+                        progress = True
+        else:  # edf
+            progress = True
+            while progress and self.queue:
+                progress = False
+                order = sorted(
+                    range(len(self.queue)),
+                    key=lambda i: (
+                        self.queue.peek(i).deadline,
+                        self.queue.peek(i).arrival,
+                    ),
+                )
+                for idx in order:
+                    if self._try_admit(idx):
+                        progress = True
+                        break  # indices shifted; re-sort
+
+    # ---------------------------------------------------------- execution
+
+    def _class_order(self) -> list[str]:
+        """Execution priority between classes for fifo/edf: the class of
+        the most urgent incomplete admitted request first.  Derived from
+        the gateway's own live-request table — adapters owe the protocol
+        nothing about how they track in-flight work, and completed history
+        is never rescanned."""
+        live_by_kind: dict[str, list[GatewayRequest]] = {}
+        for g in self._live.values():
+            live_by_kind.setdefault(g.kind, []).append(g)
+
+        def urgency(kind: str):
+            live = live_by_kind.get(kind)
+            if not live:
+                return (1, 0)
+            if self.policy == "edf":
+                return (0, min(g.deadline for g in live))
+            return (0, min(g.arrival for g in live))
+
+        return sorted(self.adapters, key=urgency)
+
+    def _do_work(self, kind: str, budget: float, spent_before: int):
+        adapter = self.adapters[kind]
+        consumed, completed, events = adapter.work(int(budget))
+        stamp = self.clock + min(
+            spent_before + consumed, self.round_budget
+        )
+        for greq in completed:
+            greq.finished = stamp
+            greq.finished_round = self.rounds
+            self._live.pop(greq.rid, None)
+            # the result lives on greq.handle; drop the input payload so a
+            # long-running gateway does not pin every served image/prompt
+            greq.payload = None
+        for ev in events:
+            self.tile_events.append(ev)
+            if self.on_event is not None:
+                self.on_event(ev)
+        return consumed
+
+    def _execution_phase(self) -> None:
+        spent = 0
+        # prefill charged at admission eats into the round before decode
+        for kind, charged in self._admit_charges.items():
+            spent += charged
+            if self.policy == "fair":
+                self._deficit[kind] -= charged
+            self._admit_charges[kind] = 0
+
+        if self.policy == "fair":
+            for kind, share in self.shares.items():
+                if self.adapters[kind].has_work() or self._deficit[kind] < 0:
+                    self._deficit[kind] += share * self.round_budget
+                else:
+                    self._deficit[kind] = 0.0  # no banking while idle
+            for kind in self.adapters:
+                if self._deficit[kind] > 0 and self.adapters[kind].has_work():
+                    used = self._do_work(kind, self._deficit[kind], spent)
+                    self._deficit[kind] -= used
+                    spent += used
+        else:
+            for kind in self._class_order():
+                if spent >= self.round_budget:
+                    break
+                if self.adapters[kind].has_work():
+                    spent += self._do_work(
+                        kind, self.round_budget - spent, spent
+                    )
+
+        # work-conserving: hand leftover budget to any class with work
+        guard = len(self.adapters) + 1
+        while spent < self.round_budget and guard:
+            guard -= 1
+            busy = [k for k in self.adapters if self.adapters[k].has_work()]
+            if not busy:
+                break
+            for kind in busy:
+                if spent >= self.round_budget:
+                    break
+                used = self._do_work(kind, self.round_budget - spent, spent)
+                if self.policy == "fair":
+                    self._deficit[kind] -= used
+                spent += used
+
+    # ------------------------------------------------------------- rounds
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(
+            a.has_work() for a in self.adapters.values()
+        )
+
+    def step_round(self) -> None:
+        """One scheduling round: admit per policy, execute against the
+        shared cycle budget, advance the modeled clock."""
+        self._admission_phase()
+        self._execution_phase()
+        self.clock += self.round_budget
+        self.rounds += 1
+
+    def drain(self, *, max_rounds: int = 100_000) -> None:
+        """Run rounds until nothing is queued or in flight."""
+        while self.pending():
+            if self.rounds >= max_rounds:
+                raise RuntimeError(
+                    f"gateway did not drain within {max_rounds} rounds "
+                    f"(queue={len(self.queue)}, policy={self.policy})"
+                )
+            self.step_round()
+
+    # -------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        """Per-class modeled-latency distribution + aggregate GOPS/W."""
+        import numpy as np
+
+        per_class: dict[str, dict] = {}
+        for kind in self.adapters:
+            lats = [
+                g.latency_ms for g in self.requests
+                if g.kind == kind and g.done
+            ]
+            n_total = sum(1 for g in self.requests if g.kind == kind)
+            per_class[kind] = dict(
+                n=n_total,
+                completed=len(lats),
+                p50_ms=float(np.percentile(lats, 50)) if lats else None,
+                p99_ms=float(np.percentile(lats, 99)) if lats else None,
+                max_ms=float(max(lats)) if lats else None,
+            )
+        total_ops = sum(a.total_ops for a in self.adapters.values())
+        elapsed_s = self.clock / cm.FREQ_HZ
+        power = (
+            cm.PAPER_TABLE1["proposed"]["gops"]
+            / cm.PAPER_TABLE1["proposed"]["gops_w"]
+        )
+        gops = total_ops / elapsed_s / 1e9 if elapsed_s > 0 else 0.0
+        return dict(
+            policy=self.policy,
+            rounds=self.rounds,
+            clock_cycles=self.clock,
+            per_class=per_class,
+            total_ops=total_ops,
+            gops=gops,
+            gops_w=gops / power,
+            fallbacks={
+                k: a.fallback_reason
+                for k, a in self.adapters.items()
+                if getattr(a, "fallback_reason", None)
+            },
+        )

@@ -42,6 +42,10 @@ class SlotTable(Generic[T]):
                 return i
         return None
 
+    def free_count(self) -> int:
+        """How many slots are free (admission-policy headroom)."""
+        return sum(1 for s in self._slots if s is None)
+
     def occupy(self, item: T) -> int | None:
         """Place ``item`` in the lowest free slot; None when full."""
         idx = self.free_index()
@@ -66,7 +70,14 @@ class SlotTable(Generic[T]):
 
 
 class FifoQueue(Generic[T]):
-    """Admission queue: requests wait here until a slot frees up."""
+    """Admission queue: requests wait here until a slot frees up.
+
+    Arrival order is the queue's one invariant; policies that admit out of
+    order (the gateway's fair-share and EDF) *inspect* in arrival order
+    (``__iter__``, ``peek``) and remove by position (``pop_at``), so FIFO
+    stays the default and reordering is an explicit policy decision at the
+    call site, never queue state.
+    """
 
     def __init__(self, items: Iterable[T] = ()):  # pragma: no branch
         self._items: list[T] = list(items)
@@ -79,6 +90,19 @@ class FifoQueue(Generic[T]):
 
     def __bool__(self) -> bool:
         return bool(self._items)
+
+    def __iter__(self):
+        """Arrival-order iteration (do not mutate while iterating)."""
+        return iter(self._items)
+
+    def peek(self, i: int = 0) -> T:
+        """The ``i``-th waiting item (0 = oldest) without consuming it."""
+        return self._items[i]
+
+    def pop_at(self, i: int) -> T:
+        """Remove and return the ``i``-th waiting item (0 = oldest) — the
+        out-of-order admission primitive for non-FIFO policies."""
+        return self._items.pop(i)
 
     def pump(
         self,

@@ -316,3 +316,110 @@ def test_autotune_bench_smoke(tmp_path):
         if r["kind"] == "tuned":
             assert r["rel_err"] <= r["cert"] <= r["target_rel_err"]
         assert "cycles" in r and "gops_w" in r and "rel_err" in r
+
+
+# -------------------------------------------------- amortized repair loop
+
+
+def test_repair_sequence_matches_one_at_a_time_rule():
+    """The precomputed sequence replays exactly the old loop's choice:
+    the fixable layer with the largest sensitivity contribution, updated
+    after every re-add."""
+    from repro.autotune.search import repair_sequence
+
+    sens = (
+        (0.5, 0.3, 0.1, 0.05, 0.02, 0.01, 0.005, 0.0),
+        (0.9, 0.2, 0.15, 0.08, 0.04, 0.02, 0.01, 0.0),
+        (0.1, 0.05, 0.02, 0.01, 0.005, 0.002, 0.001, 0.0),
+    )
+    planes = [2, 2, 7]
+    seq = repair_sequence(planes, sens, cap=100)
+    # replay the old rule step by step
+    p = list(planes)
+    for step, l_got in enumerate(seq):
+        l_old = max(
+            (l for l in range(len(p)) if p[l] < 8),
+            key=lambda l: sens[l][p[l] - 1],
+        )
+        assert l_got == l_old, f"step {step}"
+        p[l_old] += 1
+    assert all(b == 8 for b in p)  # cap 100 > total headroom: runs dry
+    assert repair_sequence([8, 8, 8], sens, cap=100) == []
+    assert len(repair_sequence(planes, sens, cap=3)) == 3
+
+
+@given(st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_bisect_repair_equal_or_fewer_measurements(seq_len):
+    """The satellite guarantee, stated over the whole repair landscape:
+    for every monotone repair depth the amortized driver finds the same
+    minimal depth the one-at-a-time loop found, within a logarithmic
+    measurement bound, *and summed over all depths it spends equal-or-
+    fewer calibration forwards than the linear loop* (each measurement is
+    a full engine replay of the calibration set — the dominant tune cost).
+    Shallow repairs (depth <= 2, the common case) pay exactly the linear
+    price, so no workload regresses in aggregate."""
+    import math
+
+    from repro.autotune.search import bisect_repair
+
+    def run(tstar):
+        calls = 0
+
+        def measure(t):
+            nonlocal calls
+            calls += 1
+            return 1.0 if t < tstar else 0.01
+
+        t, measured, reported = bisect_repair(measure, seq_len, budget=0.05)
+        assert t == tstar and measured == 0.01
+        assert reported == calls
+        return calls
+
+    total_bisect = total_linear = 0
+    for tstar in range(seq_len + 1):
+        calls = run(tstar)
+        linear_calls = tstar + 1  # the old loop: one serve per re-add
+        if tstar <= 2:
+            assert calls == linear_calls  # shallow: exactly the old price
+        assert calls <= linear_calls + 1  # never more than one extra replay
+        # and always within the logarithmic amortization bound
+        assert calls <= 2 * math.ceil(math.log2(max(tstar, 1) + 1)) + 2
+        total_bisect += calls
+        total_linear += linear_calls
+    # summed over the landscape: at worst one extra replay (a +-1 at the
+    # first gallop boundary), strictly fewer once repairs can run deep
+    assert total_bisect <= total_linear + 1
+    if seq_len >= 8:
+        assert total_bisect < total_linear
+
+
+def test_bisect_repair_exhausted_sequence_serves_best_point():
+    """When even full repair misses the budget (the old cap/dry break),
+    the driver returns the full depth so the certificate records the miss
+    from the actually-served vector."""
+    from repro.autotune.search import bisect_repair
+
+    t, measured, calls = bisect_repair(lambda t: 0.5, 5, budget=0.01)
+    assert t == 5 and measured == 0.5
+    assert calls <= 6
+
+
+def test_tune_unet_certificate_records_amortized_repair():
+    """End to end: the certify loop reports its repair depth and its
+    measurement count, and the measurement count never exceeds what the
+    one-at-a-time loop would have spent (repairs + 1 engine replays)."""
+    cfg, params, plan = _tuned()
+    cert = plan.certificate
+    assert "repairs" in cert and "measure_calls" in cert
+    # the documented bound: at most one replay over the linear loop's
+    # repairs+1 (and exactly equal for repair depths <= 2)
+    assert cert["measure_calls"] <= cert["repairs"] + 2
+    if cert["repairs"] <= 2:
+        assert cert["measure_calls"] == cert["repairs"] + 1
+    assert cert["measured_rel_err"] <= cert["cert"] <= plan.target_rel_err
+    # and the plan carries the weights-only binding the gateway verifies
+    from repro.autotune.calibrate import params_fingerprint
+
+    assert plan.params_fingerprint == params_fingerprint(params)
+    assert plan.version == 2

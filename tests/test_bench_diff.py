@@ -1,0 +1,141 @@
+"""The cross-revision bench tracker (scripts/bench_diff.py): frontier
+regressions — GOPS/W drops at equal error target, certificate loosening —
+must fail the diff; target changes and new benches must not."""
+import copy
+import importlib.util
+import json
+import pathlib
+import subprocess
+
+import pytest
+
+_SCRIPT = pathlib.Path(__file__).resolve().parent.parent / "scripts" / "bench_diff.py"
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("bench_diff", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bd = _load()
+
+BASE = dict(
+    bench="autotune",
+    rows=[
+        dict(name="tuned-0.05", target_rel_err=0.05, gops_w=10.0, cert=0.03),
+        dict(name="frontier/full-8", target_rel_err=None, gops_w=12.0,
+             cert=None),
+        dict(name="tuned-0.02", target_rel_err=0.02, gops_w=8.0, cert=0.0),
+    ],
+)
+
+GATEWAY = dict(
+    bench="gateway",
+    gate=dict(minority="seg"),
+    rows=[
+        dict(policy="fair", gops_w=1.2,
+             per_class=dict(seg=dict(p99_ms=20.0), lm=dict(p99_ms=40.0))),
+    ],
+)
+
+
+def _regressions(entries):
+    return [(e["row"], e["metric"]) for e in entries
+            if e["status"] == "regression"]
+
+
+def test_identical_revisions_are_clean():
+    entries = bd.diff_file("f", BASE, copy.deepcopy(BASE),
+                           gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    assert all(e["status"] in ("ok", "note") for e in entries)
+
+
+def test_gops_w_drop_beyond_tolerance_fails():
+    new = copy.deepcopy(BASE)
+    new["rows"][0]["gops_w"] = 9.0  # -10% at equal target
+    assert ("tuned-0.05", "gops_w") in _regressions(
+        bd.diff_file("f", BASE, new, gops_w_tol=0.05, cert_tol=0.01)
+    )
+    new["rows"][0]["gops_w"] = 9.8  # -2%: inside tolerance
+    assert not _regressions(
+        bd.diff_file("f", BASE, new, gops_w_tol=0.05, cert_tol=0.01)
+    )
+
+
+def test_certificate_loosening_fails():
+    new = copy.deepcopy(BASE)
+    new["rows"][0]["cert"] = 0.04  # promised bound grew at equal target
+    assert ("tuned-0.05", "cert") in _regressions(
+        bd.diff_file("f", BASE, new, gops_w_tol=0.05, cert_tol=0.01)
+    )
+
+
+def test_exact_row_growing_a_bound_fails():
+    new = copy.deepcopy(BASE)
+    new["rows"][2]["cert"] = 1e-3  # was exact (cert 0)
+    assert ("tuned-0.02", "cert") in _regressions(
+        bd.diff_file("f", BASE, new, gops_w_tol=0.05, cert_tol=0.01)
+    )
+
+
+def test_disappeared_metric_warns():
+    """A watched metric vanishing from the bench must not silently narrow
+    the gate: it surfaces as a warning entry."""
+    new = copy.deepcopy(BASE)
+    del new["rows"][0]["gops_w"]
+    new["rows"][0]["cert"] = None
+    entries = bd.diff_file("f", BASE, new, gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    warned = {(e["metric"]) for e in entries
+              if e["status"] == "warning" and e["row"] == "tuned-0.05"}
+    assert warned == {"gops_w", "cert"}
+
+
+def test_changed_target_is_skipped_not_compared():
+    new = copy.deepcopy(BASE)
+    new["rows"][0]["target_rel_err"] = 0.04
+    new["rows"][0]["gops_w"] = 1.0  # would be a huge drop if compared
+    entries = bd.diff_file("f", BASE, new, gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    assert any(e["status"] == "skipped" and e["row"] == "tuned-0.05"
+               for e in entries)
+
+
+def test_missing_bench_output_fails_and_missing_baseline_passes():
+    entries = bd.diff_file("f", BASE, None, gops_w_tol=0.05, cert_tol=0.01)
+    assert _regressions(entries)  # the tracker went blind: loud failure
+    entries = bd.diff_file("f", None, copy.deepcopy(BASE),
+                           gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)  # first revision of a new bench
+
+
+def test_gateway_latency_shift_warns_but_does_not_fail():
+    new = copy.deepcopy(GATEWAY)
+    new["rows"][0]["per_class"]["seg"]["p99_ms"] = 30.0  # +50%
+    entries = bd.diff_file("f", GATEWAY, new, gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    assert any(e["status"] == "warning" and e["metric"] == "minority_p99_ms"
+               for e in entries)
+    new["rows"][0]["gops_w"] = 1.0  # but a GOPS/W drop still fails
+    assert _regressions(
+        bd.diff_file("f", GATEWAY, new, gops_w_tol=0.05, cert_tol=0.01)
+    )
+
+
+@pytest.mark.parametrize("against", ["HEAD"])
+def test_cli_runs_clean_against_self(tmp_path, against):
+    """End to end through git: the committed baselines diffed against the
+    working tree copies of themselves must pass (the CI invocation)."""
+    repo = _SCRIPT.parent.parent
+    out = tmp_path / "bench_diff.json"
+    proc = subprocess.run(
+        ["python", str(_SCRIPT), "--base-ref", against,
+         "--files", "BENCH_segserve.json", "--out", str(out)],
+        cwd=repo, capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(out.read_text())
+    assert report["holds"] and report["base_ref"] == against

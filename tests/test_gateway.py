@@ -1,0 +1,413 @@
+"""The unified serving gateway: admission policies over a shared modeled
+cycle budget (pure scheduling — synthetic adapters, no model in the loop),
+plan invalidation at admission, and the progressive structure-first tile
+stream (real SegEngine)."""
+import functools
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serve.gateway import (
+    Gateway,
+    GatewayRequest,
+    StalePlanError,
+)
+
+
+# ------------------------------------------------------ synthetic adapter
+
+
+class FakeAdapter:
+    """A pure cycle-accounting engine: each request is ``cost`` modeled
+    cycles of divisible work, served oldest-admitted-first in ``unit``-cycle
+    micro-steps — the gateway protocol with the model taken out, so policy
+    properties sweep traffic shapes at zero compute."""
+
+    def __init__(self, kind, *, slots=2, unit=1_000):
+        self.kind = kind
+        self.slots = slots
+        self.unit = unit
+        self._inflight = {}
+        self._remaining = {}
+        self.total_ops = 0
+        self.fallback_reason = None
+
+    def prepare(self, payload, *, rid):
+        return int(payload)  # payload is the request's cycle cost
+
+    def free_slots(self):
+        return self.slots - len(self._inflight)
+
+    def estimate_cycles(self, payload):
+        return int(payload)
+
+    def verify_info(self):
+        return None
+
+    def admit(self, greq):
+        assert self.free_slots() > 0
+        greq.handle = greq
+        self._inflight[greq.rid] = greq
+        self._remaining[greq.rid] = greq.payload
+        return 0
+
+    def has_work(self):
+        return bool(self._remaining)
+
+    def work(self, budget):
+        consumed = 0
+        completed = []
+        while consumed < budget and self._remaining:
+            rid = next(iter(self._remaining))
+            chunk = min(self.unit, self._remaining[rid])
+            self._remaining[rid] -= chunk
+            consumed += chunk
+            self.total_ops += chunk  # 1 op/cycle: GOPS plumbing stays live
+            if self._remaining[rid] == 0:
+                del self._remaining[rid]
+                completed.append(self._inflight.pop(rid))
+        return consumed, completed, []
+
+
+def drain_stats(gw, max_rounds=10_000):
+    gw.drain(max_rounds=max_rounds)
+    return gw.stats()
+
+
+# ------------------------------------------------------------- policies
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        Gateway([FakeAdapter("a")], policy="lifo")
+    with pytest.raises(ValueError):
+        Gateway([], policy="fifo")
+    with pytest.raises(ValueError):
+        Gateway([FakeAdapter("a")], round_budget=0)
+    with pytest.raises(ValueError):
+        Gateway([FakeAdapter("a")], on_stale="ignore")
+    with pytest.raises(ValueError):
+        Gateway(
+            [FakeAdapter("a"), FakeAdapter("b")],
+            shares={"a": 0.9, "b": 0.9},
+        )
+    with pytest.raises(ValueError):
+        Gateway([FakeAdapter("a")], shares={"zzz": 1.0})
+    with pytest.raises(ValueError, match="missing"):
+        # a silently share-less class would be starvable: explicit shares
+        # must cover every served kind
+        Gateway([FakeAdapter("a"), FakeAdapter("b")], shares={"a": 1.0})
+    gw = Gateway([FakeAdapter("a")], policy="fair_share")  # alias
+    assert gw.policy == "fair"
+    with pytest.raises(ValueError):
+        gw.submit("zzz", 100)
+
+
+def test_fifo_head_of_line_blocks_minority():
+    """The failure mode the gateway exists to fix: under strict FIFO a
+    majority burst saturating its engine blocks the queue head, so the
+    minority class behind it waits even though *its* engine sits idle.
+    Fair-share admits it immediately."""
+
+    def trace(policy):
+        a, b = FakeAdapter("a", slots=1), FakeAdapter("b", slots=1)
+        gw = Gateway([a, b], policy=policy, round_budget=1_000)
+        majors = [gw.submit("a", 1_000) for _ in range(4)]
+        minor = gw.submit("b", 1_000)
+        gw.drain()
+        return majors, minor
+
+    _, minor_fifo = trace("fifo")
+    _, minor_fair = trace("fair")
+    assert minor_fair.admitted_round == 0
+    assert minor_fifo.admitted_round > 0  # HOL-blocked behind the burst
+    assert minor_fair.finished < minor_fifo.finished
+
+
+def test_fair_share_minority_p99_beats_fifo():
+    """The bench gate in miniature: same trace, fair-share strictly
+    improves the minority class's p99 modeled latency."""
+
+    def p99(policy):
+        gw = Gateway(
+            [FakeAdapter("a", slots=2), FakeAdapter("b", slots=2)],
+            policy=policy, round_budget=2_000,
+        )
+        for _ in range(8):
+            gw.submit("a", 2_000)
+        for _ in range(2):
+            gw.submit("b", 2_000)
+        return drain_stats(gw)["per_class"]["b"]["p99_ms"]
+
+    assert p99("fair") < p99("fifo")
+
+
+def test_edf_admits_tightest_deadline_first():
+    a = FakeAdapter("a", slots=1)
+    gw = Gateway([a], policy="edf", round_budget=1_000)
+    relaxed = gw.submit("a", 1_000, deadline_cycles=1_000_000)
+    tight = gw.submit("a", 1_000, deadline_cycles=500)
+    gw.drain()
+    assert tight.admitted_round == 0
+    assert relaxed.admitted_round > tight.admitted_round
+    assert tight.finished < relaxed.finished
+
+
+def test_work_conserving_when_one_class_idle():
+    """An idle class's share is not wasted: a lone busy class drains at
+    the full round budget, not at its nominal share."""
+    gw = Gateway(
+        [FakeAdapter("a", slots=1), FakeAdapter("b", slots=1)],
+        policy="fair", round_budget=1_000,
+    )
+    gw.submit("a", 4_000)
+    gw.drain()
+    assert gw.rounds == 4  # ceil(4000 / 1000), not ceil(4000 / 500)
+
+
+def test_stats_account_latency_and_ops():
+    gw = Gateway([FakeAdapter("a", slots=1)], policy="fifo",
+                 round_budget=1_000)
+    r = gw.submit("a", 2_500)
+    gw.drain()
+    st = gw.stats()
+    assert r.done and r.latency_cycles == 2_500  # finished mid round 3
+    assert st["per_class"]["a"]["completed"] == 1
+    assert st["total_ops"] == 2_500
+    assert st["gops_w"] > 0
+    assert not gw.pending()
+
+
+@given(
+    st.lists(st.integers(100, 5_000), min_size=1, max_size=12),
+    st.lists(st.integers(100, 5_000), min_size=1, max_size=12),
+    st.integers(500, 4_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_fair_share_never_starves_a_class(costs_a, costs_b, budget):
+    """The no-starvation property: under cycle-budget fair-share every
+    admitted request completes within a bounded number of rounds — each
+    backlogged class receives at least ``share * round_budget`` cycles of
+    service per round, so the bound is the class's own work divided by its
+    share (plus one admission round per request for slot waits).  Starved
+    traffic would blow through the bound and fail the drain guard."""
+    gw = Gateway(
+        [FakeAdapter("a", slots=2, unit=500),
+         FakeAdapter("b", slots=2, unit=500)],
+        policy="fair", round_budget=budget,
+    )
+    for c in costs_a:
+        gw.submit("a", c)
+    for c in costs_b:
+        gw.submit("b", c)
+    share = 0.5
+    bound = 2 + len(costs_a) + len(costs_b) + sum(
+        -(-c // int(share * budget)) for c in costs_a + costs_b
+    )
+    gw.drain(max_rounds=bound)  # raises (fails the property) if exceeded
+    assert all(g.done for g in gw.requests)
+    assert not gw.pending()
+
+
+# ----------------------------------------------- plan invalidation (real)
+
+
+@functools.lru_cache(maxsize=1)
+def _small_unet():
+    import jax
+
+    from repro.models import unet
+
+    cfg = unet.UNetConfig(
+        hw=32, in_ch=2, base=4, depth=2, convs_per_stage=1, n_classes=3,
+        quant_mode="mma_int8", impl="xla",
+    )
+    return cfg, unet.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _plan_for(params, *, stale: bool):
+    """A hand-built v2 plan bound (or mis-bound) to ``params``."""
+    from repro.autotune.calibrate import params_fingerprint
+    from repro.autotune.plan import TunedPlan
+
+    pfp = "0" * 64 if stale else params_fingerprint(params)
+    return TunedPlan(
+        workload="unet",
+        geometry=dict(depth=2, convs_per_stage=1),
+        planes=(6,) * 5,
+        target_rel_err=0.1,
+        certificate=dict(cert=0.05),
+        fingerprint="f" * 64,
+        params_fingerprint=pfp,
+        tile=28,
+        halo=12,
+    )
+
+
+def test_stale_plan_rejected_at_admission_naming_both_fingerprints():
+    from repro.autotune.calibrate import params_fingerprint
+    from repro.serve.gateway import SegAdapter
+
+    cfg, params = _small_unet()
+    plan = _plan_for(params, stale=True)
+    gw = Gateway([SegAdapter(cfg, params, plan=plan, batch=2)],
+                 policy="fifo", on_stale="reject")
+    img = np.zeros((32, 32, 2), np.float32)
+    with pytest.raises(StalePlanError) as exc:
+        gw.submit("seg", img)
+    msg = str(exc.value)
+    assert plan.params_fingerprint in msg  # the plan's binding
+    assert params_fingerprint(params) in msg  # what is actually served
+    assert "stale" in msg
+    assert not gw.requests  # nothing entered the system
+
+
+def test_fresh_plan_admits_and_serves():
+    from repro.serve.gateway import SegAdapter
+
+    cfg, params = _small_unet()
+    plan = _plan_for(params, stale=False)
+    gw = Gateway([SegAdapter(cfg, params, plan=plan, batch=2)],
+                 policy="fifo", round_budget=50_000_000)
+    r = gw.submit("seg", np.linspace(0, 1, 32 * 32 * 2, dtype=np.float32)
+                  .reshape(32, 32, 2))
+    gw.drain()
+    assert r.done and r.handle.result is not None
+    assert gw.stats()["fallbacks"] == {}
+
+
+def test_stale_plan_falls_back_to_uniform_schedule():
+    from repro.serve.gateway import SegAdapter
+
+    cfg, params = _small_unet()
+    adapter = SegAdapter(cfg, params, plan=_plan_for(params, stale=True),
+                         batch=2)
+    gw = Gateway([adapter], policy="fair", on_stale="fallback",
+                 round_budget=50_000_000)
+    r = gw.submit("seg", np.ones((32, 32, 2), np.float32))
+    gw.drain()
+    assert r.done
+    assert adapter.plan is None  # quarantined
+    assert adapter.fallback_reason and "stale" in adapter.fallback_reason
+    # the fallback engine runs the certified uniform full-digit schedule
+    assert adapter.engine.base_schedule.planes == (8,) * 5
+    assert "seg" in gw.stats()["fallbacks"]
+
+
+# --------------------------------------- progressive tile stream (real)
+
+
+def _quantized_seg(priority):
+    import dataclasses
+
+    import jax
+
+    from repro.models import unet
+    from repro.segserve import SegEngine
+
+    cfg = unet.UNetConfig(
+        hw=64, in_ch=3, base=4, depth=2, convs_per_stage=1, n_classes=3,
+        quant_mode="mma_int8", impl="xla",
+    )
+    params = unet.init_params(jax.random.PRNGKey(1), cfg)
+    sched = unet.schedule_from_params(params, 0.05)
+    cfg = dataclasses.replace(cfg, plane_schedule=tuple(sched.planes))
+    return SegEngine(cfg, params, tile=16, batch=4, adaptive=True,
+                     priority=priority)
+
+
+@functools.lru_cache(maxsize=1)
+def _structured_image():
+    from repro.segserve.synth import phantom_image
+
+    return phantom_image(64, 48, 3)
+
+
+def test_progressive_emission_structure_before_background():
+    """The acceptance ordering property: within a request, emitted tile
+    budget classes never decrease — every structure tile (low class, full
+    amplitude) streams out before any background tile."""
+    eng = _quantized_seg(priority=True)
+    events = list(eng.serve_stream([np.asarray(_structured_image())]))
+    classes = [ev.klass for ev in events]
+    assert classes == sorted(classes)
+    assert classes[0] == 0 and classes[-1] > 0  # both kinds exercised
+    # the stream is complete and consistent
+    req = events[-1].request
+    assert events[-1].done and req.result is not None
+    assert sorted(ev.tile for ev in events) == list(range(req.plan.n_tiles))
+    # partial() after completion is the final stitch
+    assert np.array_equal(req.partial(), req.result.logits)
+
+
+def test_progressive_final_stitch_bit_identical_to_non_progressive():
+    """Prioritization is scheduling only: the same image served with and
+    without structure-first ordering stitches to bit-identical logits."""
+    img = np.asarray(_structured_image())
+    a = _quantized_seg(priority=True).run([img])[0]
+    b = _quantized_seg(priority=False).run([img])[0]
+    assert np.array_equal(a.logits, b.logits)
+    assert a.cycles == b.cycles  # same tiles at the same class schedules
+
+
+def test_partial_stitch_grows_monotonically():
+    eng = _quantized_seg(priority=True)
+    [req] = [eng.submit(np.asarray(_structured_image()))]
+    eng.queue.pump(eng.slots, eng._admit)
+    seen = 0
+    while not req.done:
+        events = eng.step()
+        assert events
+        partial = req.partial() if not req.done else req.result.logits
+        written = np.abs(partial).sum(axis=-1) != 0
+        seen_now = int(written.sum())
+        assert seen_now >= seen  # cores only accumulate
+        seen = seen_now
+
+
+# ------------------------------------------------- mixed real end-to-end
+
+
+def test_gateway_serves_mixed_real_traffic():
+    """Both real engines behind one gateway: the LM burst and a seg image
+    co-scheduled, everything completes, tile events stream through."""
+    import jax
+
+    from repro import models
+    from repro.configs import get_smoke_config
+    from repro.serve.gateway import LMAdapter, SegAdapter
+
+    lm_cfg = get_smoke_config("minitron_4b")
+    lm_params = models.build(lm_cfg).init_params(jax.random.PRNGKey(0), lm_cfg)
+    seg_cfg, seg_params = _small_unet()
+    seen = []
+    gw = Gateway(
+        [
+            LMAdapter(lm_cfg, lm_params, batch=2, max_seq=24),
+            SegAdapter(seg_cfg, seg_params, batch=2),
+        ],
+        policy="fair", round_budget=3_000_000, on_event=seen.append,
+    )
+    rng = np.random.default_rng(0)
+    lms = [gw.submit("lm", rng.integers(0, lm_cfg.vocab, size=3), max_new=4)
+           for _ in range(3)]
+    # a pre-built Request whose rid collides with a gateway rid: completion
+    # matching is by handle identity, so it must still finish cleanly
+    from repro.serve.engine import Request
+
+    prebuilt = gw.submit(
+        "lm", Request(rid=0, prompt=rng.integers(0, lm_cfg.vocab, size=2),
+                      max_new=4),
+    )
+    seg = gw.submit("seg", np.ones((32, 32, 2), np.float32))
+    gw.drain(max_rounds=1_000)
+    assert all(r.done for r in lms) and seg.done and prebuilt.done
+    assert all(len(r.handle.out) == 4 for r in lms)
+    assert len(prebuilt.handle.out) == 4
+    assert seg.handle.result is not None
+    assert seen and seen == gw.tile_events
+    st = gw.stats()
+    assert st["per_class"]["lm"]["completed"] == 4
+    assert st["per_class"]["seg"]["completed"] == 1
+    assert st["gops_w"] > 0
