@@ -1,12 +1,15 @@
 """Benchmark harness — one section per paper table/claim.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway]
+        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay]
 
 Prints ``name,us_per_call,derived`` CSV rows.  The segserve, autotune and
 gateway sections also write machine-readable ``BENCH_segserve.json`` /
 ``BENCH_autotune.json`` / ``BENCH_gateway.json`` for the bench tracker
-(``scripts/bench_diff.py`` diffs them across revisions).
+(``scripts/bench_diff.py`` diffs them across revisions).  ``replay`` is
+the open-loop trace-replay bench — an alias for the gateway section,
+which replays the committed canonical trace ``traces/gateway_burst.json``
+through ``repro.workload.replay``.
 """
 from __future__ import annotations
 
@@ -76,7 +79,7 @@ def main() -> None:
         from benchmarks import autotune
 
         rows += autotune.run()
-    if args.section in ("all", "gateway"):
+    if args.section in ("all", "gateway", "replay"):
         from benchmarks import gateway
 
         rows += gateway.run()

@@ -16,7 +16,10 @@ every in-revision assert and merges clean.  This script closes that hole:
     (a *larger* certified error at the same target means the tuner now
     promises less);
   * rows whose error target changed are reported as not-comparable and
-    skipped (a frontier at a different target is a different frontier);
+    skipped (a frontier at a different target is a different frontier).
+    Gateway rows are keyed by their workload trace (name + trace schema
+    version), so a trace-schema bump or a new canonical trace reads as a
+    target change — skipped, never failed;
   * latency shifts in the gateway bench are reported as warnings only
     (scheduling latency is a trade the gateway bench gates in-revision).
 
@@ -24,7 +27,20 @@ Baselines come from ``git show <merge-base>:<file>`` so the tracker needs
 no external storage — the committed JSONs *are* the trajectory.  A file
 with no baseline (new bench, first revision) passes with a note.
 
+Multi-revision ledger
+---------------------
+Pairwise diffs cannot show *trends*.  ``--ledger BENCH_LEDGER.jsonl``
+appends one datapoint per revision — revision + committer date from git
+metadata, and each bench's headline GOPS/W + certificate — to a committed
+JSONL ledger (idempotent: re-running on the same revision replaces its
+entry).  The append doubles as a trend check: a headline GOPS/W drop
+beyond ``--gops-w-tol`` against the previous comparable ledger entry
+(same bench, same target/trace key) fails, exactly like the pairwise
+diff.  CI appends on every run and uploads the ledger with the bench
+artifacts; the committed file is refreshed at merge.
+
     python scripts/bench_diff.py [--base-ref REF] [--out bench_diff.json]
+                                 [--ledger BENCH_LEDGER.jsonl]
 
 Exit status: 0 clean, 1 on any regression.  The JSON report (and the
 human-readable table on stdout) is uploaded as a CI artifact either way.
@@ -85,12 +101,17 @@ def comparable_rows(payload: dict):
     bench = payload.get("bench", "?")
     if bench == "gateway":
         minority = payload.get("gate", {}).get("minority")
+        # rows are only comparable on the same workload: key them by the
+        # replayed trace's (name, schema version).  Pre-trace payloads
+        # (PR 4) key as None, so the schema migration skips, not fails.
+        tr = payload.get("trace")
+        target = f"{tr['name']}@v{tr['version']}" if tr else None
         for r in payload.get("rows", []):
             metrics = dict(gops_w=r.get("gops_w"))
             pc = r.get("per_class", {})
             if minority in pc and pc[minority].get("p99_ms") is not None:
                 metrics["minority_p99_ms"] = pc[minority]["p99_ms"]
-            yield f"policy:{r['policy']}", None, metrics
+            yield f"policy:{r['policy']}", target, metrics
         return
     file_target = payload.get("target_rel_err")
     for r in payload.get("rows", []):
@@ -169,6 +190,116 @@ def diff_file(path: str, base: dict | None, new: dict | None,
     return entries
 
 
+# ------------------------------------------------------------------ ledger
+
+
+def headline_metrics(payload: dict) -> dict | None:
+    """One bench payload's headline datapoint for the multi-revision
+    ledger: the frontier row the repo leads with, its error-target /
+    trace key (comparability guard), GOPS/W and certificate."""
+    bench = payload.get("bench")
+    rows = payload.get("rows", [])
+    if bench == "segserve":
+        row = next((r for r in rows if r.get("name") == "adaptive"), None)
+        if row:
+            return dict(
+                target=payload.get("target_rel_err"),
+                gops_w=row.get("gops_w"),
+                cert=payload.get("gate", {}).get("cert"),
+            )
+    if bench == "autotune":
+        ht = payload.get("headline_target")
+        row = next(
+            (r for r in rows if r.get("name") == f"tuned-{ht}"), None
+        )
+        if row:
+            return dict(target=ht, gops_w=row.get("gops_w"),
+                        cert=row.get("cert"))
+    if bench == "gateway":
+        tr = payload.get("trace")
+        target = f"{tr['name']}@v{tr['version']}" if tr else None
+        row = next(
+            (r for r in rows if r.get("policy") == "fair"), rows[0] if rows
+            else None,
+        )
+        if row:
+            out = dict(target=target, gops_w=row.get("gops_w"), cert=None)
+            pc = row.get("per_class", {})
+            if "interactive" in pc:
+                out["interactive_p99_ms"] = pc["interactive"].get("p99_ms")
+            return out
+    best = max((r for r in rows if r.get("gops_w")),
+               key=lambda r: r["gops_w"], default=None)
+    if best:
+        return dict(target=None, gops_w=best["gops_w"],
+                    cert=best.get("cert"))
+    return None
+
+
+def load_ledger(path: str) -> list[dict]:
+    try:
+        with open(path) as f:
+            return [json.loads(line) for line in f if line.strip()]
+    except FileNotFoundError:
+        return []
+
+
+def update_ledger(path: str, files, *, gops_w_tol: float) -> list[dict]:
+    """Append this revision's headline datapoint (replacing an existing
+    entry for the same revision — idempotent in CI retries) and run the
+    trend check against the previous comparable entry per bench.  Returns
+    diff-style entries (regressions fail the run, like the pairwise diff).
+    A changed target/trace key is a target change: noted, never failed.
+    """
+    revision = (_git("rev-parse", "HEAD") or "unknown").strip()
+    date = (_git("show", "-s", "--format=%cI", "HEAD") or "").strip()
+    benches: dict[str, dict] = {}
+    for f in files:
+        try:
+            with open(f) as fh:
+                payload = json.load(fh)
+        except (FileNotFoundError, json.JSONDecodeError):
+            continue
+        hm = headline_metrics(payload)
+        if hm is not None:
+            benches[payload.get("bench", f)] = hm
+    history = [e for e in load_ledger(path) if e.get("revision") != revision]
+
+    entries: list[dict] = []
+    for bench, hm in benches.items():
+        prev = next(
+            (e["benches"][bench] for e in reversed(history)
+             if bench in e.get("benches", {})),
+            None,
+        )
+        if prev is None:
+            entries.append(dict(file=path, row=bench, metric="ledger",
+                                status="note", base=None,
+                                new=hm.get("gops_w"),
+                                note="first ledger datapoint"))
+            continue
+        if prev.get("target") != hm.get("target"):
+            entries.append(dict(
+                file=path, row=bench, metric="ledger", status="skipped",
+                base=prev.get("gops_w"), new=hm.get("gops_w"),
+                note=f"target changed {prev.get('target')} -> "
+                     f"{hm.get('target')} — trend not comparable"))
+            continue
+        b_g, n_g = prev.get("gops_w"), hm.get("gops_w")
+        if b_g and n_g is not None:
+            drop = (b_g - n_g) / b_g
+            status = "regression" if drop > gops_w_tol else "ok"
+            entries.append(dict(file=path, row=bench, metric="ledger",
+                                status=status, base=b_g, new=n_g,
+                                note=f"{-drop:+.1%} vs previous ledger "
+                                     f"entry"))
+    history.append(dict(revision=revision, date=date, benches=benches))
+    with open(path, "w") as f:
+        for e in history:
+            f.write(json.dumps(e, sort_keys=True) + "\n")
+    return entries
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--base-ref", default=None,
@@ -180,6 +311,10 @@ def main(argv=None) -> int:
                     help="relative GOPS/W drop that fails (default 5%%)")
     ap.add_argument("--cert-tol", type=float, default=0.01,
                     help="relative certificate growth that fails (default 1%%)")
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="append this revision's headline datapoint to a "
+                         "JSONL ledger and trend-check it (e.g. "
+                         "BENCH_LEDGER.jsonl)")
     args = ap.parse_args(argv)
 
     base_ref = resolve_base_ref(args.base_ref)
@@ -199,6 +334,11 @@ def main(argv=None) -> int:
                 path, load_baseline(base_ref, path), new,
                 gops_w_tol=args.gops_w_tol, cert_tol=args.cert_tol,
             )
+
+    if args.ledger:
+        entries += update_ledger(
+            args.ledger, args.files, gops_w_tol=args.gops_w_tol
+        )
 
     regressions = [e for e in entries if e["status"] == "regression"]
     report = dict(

@@ -1,0 +1,93 @@
+"""Regenerate the canonical committed workload traces under ``traces/``.
+
+Traces are pure functions of their seeds (counter-PRNG arrivals, payload
+specs only — see ``repro.workload``), so this script is idempotent: the
+committed JSON is exactly what it writes, and CI/benches replay the same
+traffic forever.  Rerun it only to *change* a canonical workload, and
+bump the trace name/seed when you do — the bench tracker keys gateway
+rows by (trace name, schema version), so a silently edited trace would
+poison cross-revision diffs.
+
+    PYTHONPATH=src python scripts/make_traces.py [--outdir traces]
+
+Canonical traces
+----------------
+``gateway_burst``
+    The serving-gateway bench workload: a steady Poisson stream of
+    ``interactive`` LM requests (short prompts, latency-sensitive), an
+    on-off Markov-modulated burst of ``batch`` LM requests (long prompts
+    — the atomic-prefill overdraft shape), and a sparse deterministic
+    minority of segmentation images.  Arrival stamps assume the bench's
+    800k-cycle rounds (8 ms at the paper's 100 MHz).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.workload import arrivals, from_streams  # noqa: E402
+
+
+def gateway_burst(seed: int = 20260729):
+    """The canonical mixed-QoS burst trace (see module docstring)."""
+    interactive = arrivals.poisson(
+        20, mean_interval=400_000, seed=seed, start=50_000
+    )
+    batch = arrivals.on_off(
+        12, seed=seed + 1, burst_interval=120_000,
+        on_mean=800_000, off_mean=1_600_000, start=150_000,
+    )
+    seg = arrivals.deterministic(3, interval=2_500_000, start=600_000)
+    return from_streams(
+        "gateway_burst",
+        seed,
+        [
+            dict(kind="lm", qos="interactive", arrivals=interactive,
+                 payload=dict(prompt_len=4, max_new=8)),
+            dict(kind="lm", qos="batch", arrivals=batch,
+                 payload=dict(prompt_len=24, max_new=4)),
+            dict(kind="seg", qos="seg", arrivals=seg,
+                 payload=dict(h=96, w=80)),
+        ],
+        description=(
+            "Majority interactive LM stream + on-off batch-LM prompt "
+            "bursts + sparse seg minority; the preemptive-vs-atomic and "
+            "fair-vs-fifo gate workload of benchmarks/gateway.py"
+        ),
+        meta=dict(
+            round_budget=800_000,
+            # interactive gets headroom over its ~0.33 offered load (the
+            # latency class must not be share-saturated, or queueing —
+            # not preemption — dominates its p99); batch is deliberately
+            # overloaded vs its share (the throughput class backlogs);
+            # seg is a small minority with a protective slice.
+            shares=dict(interactive=0.4, batch=0.3, seg=0.3),
+            lm="minitron_4b smoke",
+            seg="unet hw=(96,80) in_ch=4 base=8 depth=2 cps=1",
+        ),
+    )
+
+
+BUILDERS = {"gateway_burst": gateway_burst}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--outdir", default="traces")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="trace names to regenerate (default: all)")
+    args = ap.parse_args(argv)
+    names = args.only or sorted(BUILDERS)
+    for name in names:
+        trace = BUILDERS[name]()
+        path = os.path.join(args.outdir, f"{name}.json")
+        trace.save(path)
+        print(f"wrote {path}: {trace.describe()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

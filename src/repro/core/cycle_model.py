@@ -237,55 +237,105 @@ def unet_window_cycles(
 # modeled cycle budget, so it needs LM work in the same relation-(2)
 # currency.  A decode step's block matmuls are priced as 1x1 "convolutions"
 # (h = w = 1, k = 1 — relation (3) then counts exactly ceil(cout/T_M) output
-# tiles of a plain matvec): 4 attention projections (q, k, v, o) plus the
-# two FFN matmuls per block.  This is an admission *estimate* — attention
-# score/value products and family quirks (GQA, MoE routing, ssm scans) are
-# not itemized — but it scales correctly with width, depth and the
-# installed per-layer plane schedule, which is all a scheduler needs.
+# tiles of a plain matvec): the 4 attention projections (q, k, v, o — at
+# their true head widths when ``n_heads``/``head_dim``/``n_kv_heads`` are
+# given, GQA included), the attention score (q·K^T) and value (p·V)
+# products against a ``context``-token cache, optional MoE routing (the
+# router matmul plus ``top_k`` expert FFN passes instead of one dense
+# pair), and the FFN matmuls.  With the attention/MoE kwargs omitted the
+# itemization degrades to the original projections-plus-FFN estimate, so
+# existing callers and goldens are unchanged.  Family quirks that are not
+# matmuls (ssm scans, softmax, RoPE) remain un-itemized — they are not
+# accelerator AND-array work in the paper's model.
 
 
-def lm_block_layers(d_model: int, d_ff: int) -> list[ConvLayerSpec]:
-    """One transformer block's decode-step matmuls as 1x1-conv specs."""
-    proj = ConvLayerSpec(1, 1, d_model, d_model, k=1, pad=0)
-    return [
-        proj, proj, proj, proj,  # wq, wk, wv, wo
-        ConvLayerSpec(1, 1, d_model, d_ff, k=1, pad=0),
-        ConvLayerSpec(1, 1, d_ff, d_model, k=1, pad=0),
+def lm_block_layers(
+    d_model: int,
+    d_ff: int,
+    *,
+    n_heads: int | None = None,
+    head_dim: int | None = None,
+    n_kv_heads: int | None = None,
+    context: int = 0,
+    n_experts: int = 0,
+    top_k: int = 1,
+) -> list[ConvLayerSpec]:
+    """One transformer block's decode-step matmuls as 1x1-conv specs.
+
+    ``context`` > 0 (with ``n_heads``) itemizes the attention score/value
+    products against a cache of that many tokens; ``n_experts`` > 0
+    itemizes MoE routing (router matmul + ``top_k`` expert FFN passes).
+    """
+    if n_heads is None:
+        q_width = kv_width = d_model
+    else:
+        hd = head_dim or d_model // n_heads
+        q_width = n_heads * hd
+        kv_width = (n_kv_heads or n_heads) * hd
+    layers = [
+        ConvLayerSpec(1, 1, d_model, q_width, k=1, pad=0),  # wq
+        ConvLayerSpec(1, 1, d_model, kv_width, k=1, pad=0),  # wk
+        ConvLayerSpec(1, 1, d_model, kv_width, k=1, pad=0),  # wv
+        ConvLayerSpec(1, 1, q_width, d_model, k=1, pad=0),  # wo
     ]
+    if context > 0 and n_heads:
+        hd = head_dim or d_model // n_heads
+        # q·K^T: per head a (1, hd)·(hd, T) matvec — T outputs contracting
+        # over hd; p·V: (1, T)·(T, hd) — hd outputs contracting over T.
+        layers.append(
+            ConvLayerSpec(1, 1, hd, n_heads * context, k=1, pad=0)
+        )
+        layers.append(
+            ConvLayerSpec(1, 1, context, n_heads * hd, k=1, pad=0)
+        )
+    ffn_passes = 1
+    if n_experts > 0:
+        layers.append(ConvLayerSpec(1, 1, d_model, n_experts, k=1, pad=0))
+        ffn_passes = max(1, int(top_k))
+    for _ in range(ffn_passes):
+        layers.append(ConvLayerSpec(1, 1, d_model, d_ff, k=1, pad=0))
+        layers.append(ConvLayerSpec(1, 1, d_ff, d_model, k=1, pad=0))
+    return layers
 
 
 @functools.lru_cache(maxsize=4096)
 def _lm_step_cycles_cached(
     d_model: int, d_ff: int, n_layers: int, planes: tuple[int, ...],
-    mode: str,
+    mode: str, attn_kw: tuple,
 ) -> int:
     total = 0
+    specs = lm_block_layers(d_model, d_ff, **dict(attn_kw))
     for l in range(n_layers):
         tc = schedule_tile_cycles(_planes_for(planes, l), mode=mode)
-        total += sum(
-            spec.cycles(tile_cycles=tc) for spec in lm_block_layers(d_model, d_ff)
-        )
+        total += sum(spec.cycles(tile_cycles=tc) for spec in specs)
     return total
 
 
 def lm_step_cycles(
     d_model: int, d_ff: int, n_layers: int, schedule=None, *,
-    mode: str = "pipelined",
+    mode: str = "pipelined", **attn_kw,
 ) -> int:
     """Relation-(2) cycles of one decode step (one token, one sequence)
     through an ``n_layers`` block stack under a per-layer plane schedule
     (``None`` = full ``N_BITS`` digits everywhere), memoized on the
-    signature like :func:`unet_window_cycles`."""
+    signature like :func:`unet_window_cycles`.  Extra keyword args
+    (``n_heads``/``head_dim``/``n_kv_heads``/``context``/``n_experts``/
+    ``top_k``) pass through to :func:`lm_block_layers` for the sharper
+    attention/MoE itemization."""
     planes = (
         (N_BITS,) * n_layers if schedule is None
         else tuple(int(b) for b in schedule)
     )
-    return _lm_step_cycles_cached(d_model, d_ff, n_layers, planes, mode)
+    return _lm_step_cycles_cached(
+        d_model, d_ff, n_layers, planes, mode, tuple(sorted(attn_kw.items()))
+    )
 
 
-def lm_step_ops(d_model: int, d_ff: int, n_layers: int) -> int:
+def lm_step_ops(d_model: int, d_ff: int, n_layers: int, **attn_kw) -> int:
     """Useful MAC ops of one decode step (same itemization as the cycles)."""
-    return n_layers * sum(l.ops() for l in lm_block_layers(d_model, d_ff))
+    return n_layers * sum(
+        l.ops() for l in lm_block_layers(d_model, d_ff, **attn_kw)
+    )
 
 
 @dataclass

@@ -165,7 +165,10 @@ def flash_attention(
     _, t, kv, _ = k.shape
     groups = h // kv
     scale = 1.0 / math.sqrt(d)
-    q_pos = (jnp.arange(s) + q_offset)[None, :]  # (1, S)
+    if jnp.ndim(q_offset) > 0:  # per-row offsets (slot-isolated decode)
+        q_pos = jnp.reshape(q_offset, (-1, 1)) + jnp.arange(s)[None, :]
+    else:
+        q_pos = (jnp.arange(s) + q_offset)[None, :]  # (1, S)
     qg = q.reshape(b, s, kv, groups, d)
 
     # Short-query (decode) fast path: one unchunked pass — no loop, full
@@ -246,7 +249,12 @@ def attention(
     """Multi-head attention with GQA/MQA, RoPE, SWA and optional KV cache.
 
     x: (B, S, D) — seq-sharded on entry (SP); internals are head-sharded.
-    cache: (k, v) each (B, S_max, KV, hd); cache_index: scalar write offset.
+    cache: (k, v) each (B, S_max, KV, hd); cache_index: write offset —
+    a scalar (every row appends at the same position, the batched-serving
+    approximation), or a (B,) vector of per-row positions (slot-isolated
+    decode: each row writes at its own length, so a row's cache history
+    depends only on its own tokens and serving order cannot perturb
+    numerics — what the engine's chunked-prefill path relies on).
     Returns (out, new_cache).
     """
     b, s, _ = x.shape
@@ -262,6 +270,20 @@ def attention(
     new_cache = None
     if cache is not None:
         ck, cv = cache
+        if jnp.ndim(cache_index) > 0:
+            # per-row write positions: row b's update lands at its own
+            # index, so rows never stomp each other's cache history
+            def _write(c, u):
+                return jax.vmap(
+                    lambda cr, ur, i: jax.lax.dynamic_update_slice(
+                        cr, ur, (i, 0, 0)
+                    )
+                )(c, u, cache_index)
+        else:
+            def _write(c, u):
+                return jax.lax.dynamic_update_slice(
+                    c, u, (0, cache_index, 0, 0)
+                )
         if ck.dtype == jnp.int8:
             # int8 KV cache with a calibrated static scale (TRT-LLM-style;
             # halves decode cache traffic — §Perf iteration 3).
@@ -269,14 +291,14 @@ def attention(
                           -127, 127).astype(jnp.int8)
             vq = jnp.clip(jnp.round(v.astype(jnp.float32) / KV_CACHE_SCALE),
                           -127, 127).astype(jnp.int8)
-            ck = jax.lax.dynamic_update_slice(ck, kq, (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, vq, (0, cache_index, 0, 0))
+            ck = _write(ck, kq)
+            cv = _write(cv, vq)
             new_cache = (ck, cv)
             k = (ck.astype(jnp.float32) * KV_CACHE_SCALE).astype(q.dtype)
             v = (cv.astype(jnp.float32) * KV_CACHE_SCALE).astype(q.dtype)
         else:
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+            ck = _write(ck, k.astype(ck.dtype))
+            cv = _write(cv, v.astype(cv.dtype))
             new_cache = (ck, cv)
             k, v = ck, cv
         q_offset = cache_index

@@ -89,7 +89,10 @@ def forward(
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
     b, s, _ = x.shape
     base = 0 if cache_index is None else cache_index
-    positions = base + jnp.arange(s)[None, :]
+    if jnp.ndim(base) > 0:  # per-row cache positions (slot-isolated decode)
+        positions = jnp.reshape(base, (-1, 1)) + jnp.arange(s)[None, :]
+    else:
+        positions = base + jnp.arange(s)[None, :]
     x = constrain(x, "batch", "seq" if cfg.seq_shard else None, None)
 
     aux0 = jnp.zeros((), jnp.float32)

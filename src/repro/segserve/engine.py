@@ -119,6 +119,10 @@ class TileEvent:
 class SegRequest:
     rid: int
     image: np.ndarray  # (H, W, C)
+    # scheduling label: tiles of different groups never share a micro-batch,
+    # so a caller (the gateway) can step one group's work under its own
+    # cycle quantum without charging it for another group's tiles
+    group: str | None = None
     # filled at admission
     plan: tiling.TilePlan | None = None
     slot: int = -1
@@ -281,8 +285,11 @@ class SegEngine:
 
     # ------------------------------------------------------------ admission
 
-    def submit(self, image: np.ndarray) -> SegRequest:
-        """Enqueue one (H, W, C) image; returns its request handle."""
+    def submit(self, image: np.ndarray, *, group: str | None = None
+               ) -> SegRequest:
+        """Enqueue one (H, W, C) image; returns its request handle.
+        ``group`` labels the request's tiles for group-scoped stepping
+        (QoS classes at the gateway); ``None`` joins the unlabeled pool."""
         image = np.asarray(image)
         if (image.ndim != 3 or image.shape[-1] != self.cfg.in_ch
                 or image.shape[0] < 1 or image.shape[1] < 1):
@@ -290,7 +297,7 @@ class SegEngine:
                 f"expected (H, W, {self.cfg.in_ch}) image with H, W >= 1, "
                 f"got {image.shape}"
             )
-        req = SegRequest(rid=self._next_rid, image=image)
+        req = SegRequest(rid=self._next_rid, image=image, group=group)
         self._next_rid += 1
         self.queue.push(req)
         return req
@@ -337,16 +344,58 @@ class SegEngine:
         else:
             octave = int(math.floor(math.log2(amax))) if amax > 0 else 0
         for ti, (spec, k) in enumerate(zip(req.plan.tiles, classes)):
-            key = (spec.in_h, spec.in_w, k, octave)
+            key = (spec.in_h, spec.in_w, k, octave, req.group)
             self._tasks.setdefault(key, []).append((req, ti))
             req.class_counts[k] = req.class_counts.get(k, 0) + 1
         return True
 
     # ------------------------------------------------------------- stepping
 
-    def step(self) -> list[TileEvent]:
+    def has_work(self, group: str | None = ...) -> bool:
+        """Admitted tiles are waiting to run (the public surface callers —
+        the gateway's adapter — poll instead of reaching into the task
+        table).  Pass ``group`` to ask about one scheduling group only
+        (``...``, the default, means *any* group)."""
+        if group is ...:
+            return bool(self._tasks)
+        return any(key[4] == group for key in self._tasks)
+
+    def pending(self, group: str | None = ...) -> int:
+        """How many admitted tiles are waiting to run."""
+        return sum(
+            len(g) for key, g in self._tasks.items()
+            if group is ... or key[4] == group
+        )
+
+    def _next_key(self, group=...):
+        keys = (
+            list(self._tasks) if group is ...
+            else [k for k in self._tasks if k[4] == group]
+        )
+        if not keys:
+            return None
+        if self.priority:
+            return min(keys, key=lambda g: g[2])
+        return keys[0]
+
+    def next_cost(self, group: str | None = ...) -> int:
+        """Relation-(2) price of the micro-batch :meth:`step` would run
+        next (0 when idle).  The preemption point of the serving gateway:
+        a step whose price exceeds the class's remaining quantum is not
+        started — the quantum carries to the next round instead of the
+        step overdrafting it."""
+        key = self._next_key(group)
+        if key is None:
+            return 0
+        in_h, in_w, k = key[0], key[1], key[2]
+        n = min(len(self._tasks[key]), self.batch)
+        return n * self._tile_cycles(in_h, in_w, k)
+
+    def step(self, group: str | None = ...) -> list[TileEvent]:
         """Run one micro-batch and return its tile emissions (empty when
-        idle — falsy, so boolean call sites keep working).
+        idle — falsy, so boolean call sites keep working).  ``group``
+        restricts the step to one scheduling group's tiles (the gateway's
+        class-quantum accounting); the default serves any group.
 
         Group choice is the prioritization point: structure-first (lowest
         budget class; FIFO among equals via dict insertion order) under
@@ -356,17 +405,14 @@ class SegEngine:
         policy, not numerics (see the ``priority`` docstring for the one
         shared-scale caveat under slot churn).
         """
-        if not self._tasks:
+        key = self._next_key(group)
+        if key is None:
             return []
-        if self.priority:
-            key = min(self._tasks, key=lambda g: g[2])
-        else:
-            key = next(iter(self._tasks))
-        group = self._tasks[key]
-        taken, self._tasks[key] = group[: self.batch], group[self.batch :]
+        task_group = self._tasks[key]
+        taken, self._tasks[key] = task_group[: self.batch], task_group[self.batch :]
         if not self._tasks[key]:
             del self._tasks[key]
-        in_h, in_w, k, _octave = key
+        in_h, in_w, k = key[0], key[1], key[2]
         x = np.zeros((self.batch, in_h, in_w, self.cfg.in_ch), np.float32)
         for b, (req, ti) in enumerate(taken):
             spec = req.plan.tiles[ti]

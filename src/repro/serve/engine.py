@@ -19,6 +19,7 @@ precision).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 import jax
@@ -27,6 +28,21 @@ import numpy as np
 
 from . import serve_step as ss
 from .queue import FifoQueue, SlotTable
+
+
+@functools.lru_cache(maxsize=32)
+def shared_decode(cfg, batch: int, max_seq: int):
+    """Process-wide jitted decode step, shared by every Engine at the same
+    (cfg, batch, max_seq) signature — the LM counterpart of segserve's
+    ``_shared_forward``.  One compilation serves repeated engine builds
+    (the gateway bench constructs an engine per policy/mode run), and —
+    load-bearing for the preemption bench's bit-identity gate — two
+    engines compared against each other run the *same executable*:
+    separately jitted closures can compile to instruction orders that
+    differ in last-ulp float reduction behavior, which greedy argmax over
+    near-tied logits amplifies into different tokens."""
+    fn, _ = ss.make_decode(cfg, batch, max_seq)
+    return jax.jit(fn)
 
 
 def lm_schedule_from_params(params, cfg, target_rel_err: float):
@@ -94,6 +110,25 @@ class Request:
     max_new: int = 16
     out: list[int] = field(default_factory=list)
     done: bool = False
+    prefill_pos: int = 0  # prompt tokens already prefetched into the cache
+
+    @property
+    def prefill_remaining(self) -> int:
+        return max(len(self.prompt) - self.prefill_pos, 0)
+
+    @property
+    def ready(self) -> bool:
+        """Prefill complete — the request may join decode micro-batches."""
+        return self.prefill_pos >= len(self.prompt)
+
+
+# Families whose decode path supports a per-slot cache-index *vector*:
+# each slot writes K/V at its own length and attends only its own history,
+# so a request's numerics depend solely on its own tokens — serving order
+# (chunked prefill, preemption, slot reuse) cannot perturb outputs.  The
+# recurrent/scalar-index families keep the legacy shared-index
+# approximation (their state update is not position-addressed).
+VECTOR_INDEX_FAMILIES = ("dense", "moe", "vlm")
 
 
 class Engine:
@@ -111,8 +146,7 @@ class Engine:
             self.extras["cross_kv"] = self.mod.precompute_cross_kv(
                 params, self.extras["memory"], cfg
             )
-        self.decode_fn, _ = ss.make_decode(cfg, batch, max_seq)
-        self.decode_fn = jax.jit(self.decode_fn)
+        self.decode_fn = shared_decode(cfg, batch, max_seq)
         if cfg.family in ("dense", "moe", "vlm", "encdec"):
             self.cache = self.mod.init_cache(cfg, batch, max_seq)
         elif cfg.family == "hybrid":
@@ -121,53 +155,105 @@ class Engine:
             self.cache = self.mod.init_state(cfg, batch)
         self.slots: SlotTable[Request] = SlotTable(batch)
         self.lengths = np.zeros(batch, np.int32)
+        self._vector_index = cfg.family in VECTOR_INDEX_FAMILIES
 
-    def admit(self, req: Request) -> bool:
-        """Prefill a request into a free slot (per-slot prefill keeps the
-        batch decode hot; a production engine would chunk prefills)."""
-        slot = self.slots.free_index()
+    def _index(self, slot: int):
+        """The cache index argument for a call driven by ``slot``: the
+        per-slot length vector when the family supports slot isolation,
+        else the legacy scalar (that slot's own length for prefill)."""
+        if self._vector_index:
+            return jnp.asarray(self.lengths)
+        return jnp.int32(self.lengths[slot])
+
+    # ---------------------------------------------------------- admission
+
+    def admit_slot(self, req: Request) -> bool:
+        """Occupy a slot for ``req`` without prefilling — the chunked-
+        prefill entry point.  Prefill is then metered through
+        :meth:`prefill` (the serving gateway charges it against round
+        budgets instead of atomically at admission); the request joins
+        decode batches once ``req.ready``."""
+        slot = self.slots.occupy(req)
         if slot is None:
             return False
-        # Prefill token-by-token through the decode path (slot-isolated);
-        # cheap at smoke scale and requires no batched prompt alignment.
-        toks = req.prompt.astype(np.int32)
-        for t_idx in range(len(toks)):
-            tok = jnp.full((self.batch, 1), 0, jnp.int32).at[slot, 0].set(int(toks[t_idx]))
-            logits, self.cache = self.decode_fn(
-                self.params, tok, self.cache, jnp.int32(self.lengths[slot]),
-                self.extras,
-            )
-            self.lengths[slot] += 1
-        occupied = self.slots.occupy(req)
-        assert occupied == slot
-        req._last_logits = np.asarray(logits[slot, -1])  # type: ignore[attr-defined]
+        if self._vector_index:
+            # fresh position track: the new occupant's writes overwrite the
+            # predecessor's rows before any of its own reads reach them
+            self.lengths[slot] = 0
+        req.prefill_pos = 0
         return True
 
-    def step(self) -> list[Request]:
-        """One continuous-batching decode step for all active slots;
-        returns the requests that completed on this step (empty when idle
-        — falsy, so boolean call sites keep working).  The gateway's LM
-        adapter consumes the completions to stamp modeled-clock finish
-        times without re-scanning the slot table."""
-        active = self.slots.active()
+    def prefill(self, req: Request, max_tokens: int | None = None) -> int:
+        """Run up to ``max_tokens`` prompt tokens of ``req`` through the
+        decode path (token-by-token, slot-isolated); returns how many were
+        processed.  Call with ``None`` to finish the prompt."""
+        active = {id(r): i for i, r in self.slots.active()}
+        slot = active.get(id(req))
+        if slot is None:
+            raise ValueError(f"request {req.rid} holds no slot")
+        n = req.prefill_remaining if max_tokens is None else min(
+            int(max_tokens), req.prefill_remaining
+        )
+        toks = req.prompt.astype(np.int32)
+        for _ in range(n):
+            tok = jnp.full((self.batch, 1), 0, jnp.int32).at[slot, 0].set(
+                int(toks[req.prefill_pos])
+            )
+            logits, self.cache = self.decode_fn(
+                self.params, tok, self.cache, self._index(slot), self.extras,
+            )
+            self.lengths[slot] += 1
+            req.prefill_pos += 1
+        if n and req.ready:
+            req._last_logits = np.asarray(logits[slot, -1])  # type: ignore[attr-defined]
+        return n
+
+    def admit(self, req: Request) -> bool:
+        """Atomic admission: occupy a slot and prefill the whole prompt
+        (the pre-gateway path; :meth:`Engine.run` and single-workload
+        callers keep this one-call surface)."""
+        if not self.admit_slot(req):
+            return False
+        self.prefill(req)
+        return True
+
+    # ------------------------------------------------------------- decode
+
+    def ready_slots(self) -> list[tuple[int, Request]]:
+        """Active slots whose occupant finished prefill — the decode
+        micro-batch :meth:`step` will run."""
+        return [(i, r) for i, r in self.slots.active() if r.ready]
+
+    def step(self, only: set[int] | None = None) -> list[Request]:
+        """One continuous-batching decode step for all *ready* slots
+        (slots mid-prefill under the chunked path are skipped); returns
+        the requests that completed on this step (empty when idle — falsy,
+        so boolean call sites keep working).  ``only`` restricts the step
+        to a subset of slot indices (the gateway's class-quantum scoping;
+        under the vector-index families slot numerics are isolated, so a
+        subset step leaves excluded slots bit-exactly untouched).  The
+        gateway's LM adapter consumes the completions to stamp
+        modeled-clock finish times without re-scanning the slot table."""
+        active = self.ready_slots()
+        if only is not None:
+            active = [(i, r) for i, r in active if i in only]
         if not active:
             return []
         toks = np.zeros((self.batch, 1), np.int32)
         for i, req in active:
             last = getattr(req, "_last_logits")
             toks[i, 0] = int(np.argmax(last))
-        # NOTE: per-slot cache_index differs; we decode with the max index and
-        # rely on causal masking per-slot via positions.  For heterogeneous
-        # lengths a production engine passes a per-slot index vector; here we
-        # step slots at equal length after admission (smoke-scale).  The same
-        # approximation covers slot reuse: lengths and cache rows carry over
-        # from the previous occupant, so a refilled slot continues from its
-        # predecessor's position instead of 0 — fine for throughput smoke
-        # tests, wrong for content; the per-slot index vector fixes both.
-        idx = int(max(self.lengths[i] for i, _ in active))
+        if self._vector_index:
+            # per-slot positions: each row writes at its own length and
+            # attends only its own history — numerics are slot-isolated,
+            # so serving order and slot reuse cannot change outputs
+            idx = jnp.asarray(self.lengths)
+        else:
+            # legacy approximation for recurrent families: decode at the
+            # max index and rely on causal masking via positions
+            idx = jnp.int32(int(max(self.lengths[i] for i, _ in active)))
         logits, self.cache = self.decode_fn(
-            self.params, jnp.asarray(toks), self.cache, jnp.int32(idx),
-            self.extras,
+            self.params, jnp.asarray(toks), self.cache, idx, self.extras,
         )
         completed: list[Request] = []
         for i, req in active:

@@ -1,11 +1,13 @@
 """Unified admission-controlled serving gateway: one front door for both
-engines, co-scheduled against a shared modeled cycle budget.
+engines, co-scheduled against a shared modeled cycle budget — with
+preemptive chunked execution, per-request QoS classes and an open-loop
+(mid-round) arrival path.
 
 The LM Engine (``serve.engine``) and SegEngine (``segserve.engine``) each
 own a correct inner loop over the shared ``serve.queue`` primitives, but a
 deployment serving heterogeneous traffic needs a *single* admission point
 that can (1) decide which request enters which engine when, (2) split the
-accelerator's modeled cycle capacity between the two workloads each
+accelerator's modeled cycle capacity between traffic classes each
 scheduling round, and (3) refuse to serve a tuned plan whose weights have
 drifted.  This module is that front door.
 
@@ -16,8 +18,7 @@ currency every bench and certificate in this repo is priced in.  The
 gateway runs discrete *rounds* of ``round_budget`` modeled cycles.  Each
 round: the admission policy moves requests from the gateway queue into
 engine slots, then the execution policy spends the round's budget stepping
-the engines' micro-batches (one LM continuous-batching decode step / one
-seg tile micro-batch at a time, charged at its modeled price).  Three
+the engines' micro-batches, charged at their modeled price.  Three
 policies ship:
 
 ``fifo``
@@ -29,23 +30,71 @@ policies ship:
     accrues ``share * round_budget`` cycles of quantum per round (deficit
     carries over while the class has work, resets while idle), admission
     interleaves classes oldest-first, and leftover budget is
-    work-conserving.  No class can starve: a backlogged class receives at
-    least its share of every round.
+    work-conserving slack.  No class can starve: a backlogged class
+    receives at least its share of every round.
 ``edf``
     Earliest-deadline-first on the modeled clock, deadlines defaulting to
     ``deadline_factor x`` the request's admission estimate.  Admission and
     execution both follow the earliest live deadline.
 
-Plan invalidation at admission
-------------------------------
+QoS classes (PR 5)
+------------------
+The scheduling class of a request is its ``qos`` label, *decoupled from
+the engine kind*: ``submit(..., qos='interactive')`` and ``qos='batch'``
+may both land on one ``LMAdapter``, each with its own fair share and its
+own latency account.  ``qos`` defaults to the adapter kind, so kind-level
+scheduling (PR 4 behavior) is the degenerate labeling.  Every non-kind
+class must be declared in ``shares`` — a silently share-less class would
+void the starvation-freedom guarantee the fair policy exists for.
+
+Preemptive chunked execution (PR 5)
+-----------------------------------
+Under ``preemptive=True`` (the default) adapters never overdraft a budget
+they are handed:
+
+* LM prefill is *chunked* — charged token-by-token through the round
+  budget as it runs, instead of atomically at admission.  A long prompt
+  no longer front-loads its whole cost into one round; the remainder
+  yields to the next round.
+* A SegEngine micro-batch whose relation-(2) price exceeds the class's
+  remaining quantum is *not started*: the quantum carries (deficit is
+  never driven negative) and the batch runs once the class has accrued
+  enough.  This is the digit-serial (DSLR-CNN online-arithmetic) story:
+  work is metered in small online chunks, so yielding between chunks is
+  architecturally free.
+* LM decode steps are class-scoped (``Engine.step(only=...)``): a class's
+  quantum pays for its own slots only.
+
+``preemptive=False`` restores the PR 4 atomic semantics (prefill charged
+at admission, micro-steps run past the budget) — the bench's baseline.
+Liveness: if *no* class makes progress for enough consecutive rounds to
+prove the cheapest step can never fit (its price exceeds the full round
+budget), the gateway forces exactly one micro-step and records the
+overdraft in ``stats()['forced']``.
+
+Open-loop arrivals (PR 5)
+-------------------------
+``step_round(arrivals=...)`` injects requests *inside* the round at their
+stamped modeled cycle: execution proceeds to each arrival's offset, the
+request is submitted with ``arrival_cycle`` equal to its stamp, and a
+mid-round admission pass runs before execution resumes.  ``advance_to``
+runs rounds until the clock reaches a target cycle.  The open-loop replay
+harness (``repro.workload.replay``) drives this path from serialized
+traces.
+
+Plan invalidation and hot-reload
+--------------------------------
 An adapter serving a :class:`~repro.autotune.plan.TunedPlan` carries the
 plan's ``params_fingerprint`` next to a fingerprint of the weights it is
 *actually* serving.  Every submission re-checks the pair; on mismatch the
 gateway either rejects the request with :class:`StalePlanError` (naming
 both fingerprints) or — ``on_stale='fallback'`` — quarantines the plan and
-rebuilds the engine on the certified uniform schedule (full 8-plane
-digits, zero truncation error) before admitting.  A certificate conditioned
-on dead weights is never silently served.
+rebuilds the engine on the certified uniform schedule before admitting.
+:meth:`Gateway.swap_plan` is the hot-reload path: the incoming plan's
+fingerprint is re-verified against the served params immediately, then the
+plan installs at the first round boundary where the adapter is idle
+(admission to it is held until the swap lands, so mid-stream requests
+drain under the old plan and later ones serve under the new one).
 
 Progressive results
 -------------------
@@ -93,22 +142,29 @@ def _check_plan(adapter, on_stale: str) -> None:
     adapter.install_fallback(msg)
 
 
-def _verify_info(adapter):
-    """The cached (plan binding, served binding) fingerprint pair for an
-    adapter serving a tuned plan.  The served weights are fixed for the
-    adapter's lifetime, so the SHA-256 over them is computed once and
-    reused by every admission check — the per-submission work is a string
-    compare."""
-    if adapter.plan is None:
-        return None
+def _served_fingerprint(adapter) -> str:
+    """SHA-256 over the weights the adapter actually serves, computed once
+    per adapter lifetime (weights are fixed) and cached."""
     if getattr(adapter, "_served_fp", None) is None:
         from repro.autotune.calibrate import params_fingerprint
 
         adapter._served_fp = params_fingerprint(adapter.params)
-    plan_fp = adapter.plan.params_fingerprint or (
-        f"<unverifiable v1 plan {adapter.plan.fingerprint}>"
+    return adapter._served_fp
+
+
+def _plan_fingerprint(plan) -> str:
+    return plan.params_fingerprint or (
+        f"<unverifiable v1 plan {plan.fingerprint}>"
     )
-    return plan_fp, adapter._served_fp
+
+
+def _verify_info(adapter):
+    """The cached (plan binding, served binding) fingerprint pair for an
+    adapter serving a tuned plan — the per-submission work is a string
+    compare."""
+    if adapter.plan is None:
+        return None
+    return _plan_fingerprint(adapter.plan), _served_fingerprint(adapter)
 
 
 @dataclass
@@ -117,10 +173,11 @@ class GatewayRequest:
 
     rid: int
     kind: str  # adapter key: 'lm' | 'seg' | ...
+    qos: str  # scheduling class (defaults to kind at submit)
     payload: Any  # engine-native request (serve.engine.Request / image)
     est_cycles: int  # relation-(2) admission estimate
     deadline: int | None  # absolute modeled-cycle deadline (EDF)
-    arrival: int  # modeled clock at submit
+    arrival: int  # modeled clock at submit (trace stamp under open loop)
     admitted: int | None = None  # modeled clock at admission
     finished: int | None = None  # modeled clock at completion
     arrival_round: int = 0
@@ -149,13 +206,24 @@ class GatewayRequest:
 #   kind            class name ('lm', 'seg')
 #   free_slots()    admission headroom
 #   estimate_cycles(payload)  relation-(2) cost estimate for admission
-#   admit(greq)     occupy a slot; returns cycles charged up front (prefill)
-#   has_work()      admitted-but-unfinished micro-work pending
-#   work(budget)    run micro-steps until ~budget cycles are consumed;
-#                   returns (consumed, completed GatewayRequests, events)
+#   admit(greq)     occupy a slot; returns cycles charged up front
+#                   (atomic-mode prefill; 0 under preemptive chunking)
+#   has_work(qos=None)        admitted-but-unfinished micro-work pending
+#                   (restricted to one QoS class when given)
+#   work(budget, qos=None, force=False, soft_limit=None)
+#                   run micro-steps charging at most ~budget cycles;
+#                   preemptive adapters never exceed budget (the *hard*
+#                   quantum bound) unless ``force`` (then exactly one
+#                   micro-step may overdraft).  ``soft_limit`` marks a
+#                   segment boundary (a mid-round arrival's offset): no
+#                   new micro-step *starts* at or past it, but a step
+#                   started before it may run across — arrivals queue
+#                   behind in-flight work, they do not interrupt it.
+#                   Returns (consumed, completed GatewayRequests, events)
 #   total_ops       useful-op account for aggregate GOPS/W
 #   verify_info()   None, or (plan params fingerprint, served fingerprint)
 #   install_fallback(reason)  drop a stale plan for the uniform schedule
+#   install_plan(plan)        hot-swap a verified plan (adapter idle)
 #
 # The gateway itself never touches jax: policies are pure cycle-clock
 # scheduling, so tests drive them with synthetic adapters at zero model
@@ -168,21 +236,27 @@ class LMAdapter:
     ``plan`` (a ``workload='lm'`` :class:`~repro.autotune.plan.TunedPlan`)
     installs the certified per-layer schedule via
     :func:`repro.autotune.api.apply_plan_lm` and arms the admission-time
-    fingerprint check.  Decode work is priced per continuous-batching step:
-    ``cm.lm_step_cycles`` x active slots; prefill is charged at admission
-    (prompt length x step price).
+    fingerprint check.  Work is priced per continuous-batching step at the
+    sharper ``cm.lm_step_cycles`` itemization (true GQA projection widths,
+    attention score/value products against a ``max_seq``-token cache — a
+    conservative context upper bound — and MoE routing when the config has
+    experts).  Under ``preemptive=True`` prefill runs in budget-sized
+    chunks through ``work`` and decode steps are class-scoped;
+    ``preemptive=False`` restores the PR 4 atomic path (prefill charged in
+    full at admission).
     """
 
     kind = "lm"
 
     def __init__(self, cfg, params, *, batch: int, max_seq: int,
-                 plan=None, extras=None):
+                 plan=None, extras=None, preemptive: bool = True):
         self.plan = plan
         self.params = params
         self._base_cfg = cfg
         self._batch = batch
         self._max_seq = max_seq
         self._extras = extras
+        self.preemptive = bool(preemptive)
         self.fallback_reason: str | None = None
         if plan is not None:
             from repro.autotune.api import apply_plan_lm
@@ -192,6 +266,7 @@ class LMAdapter:
         # keyed by handle identity: pre-built Requests keep their own rid,
         # which need not match (or may collide with) the gateway's counter
         self._inflight: dict[int, GatewayRequest] = {}
+        self._order: list[GatewayRequest] = []  # admission order (prefill)
         self.total_ops = 0
 
     def _build(self, cfg) -> None:
@@ -203,12 +278,19 @@ class LMAdapter:
             extras=self._extras,
         )
         schedule = cfg.quant.plane_schedule
-        self._step_cycles = cm.lm_step_cycles(
-            cfg.d_model, cfg.d_ff, cfg.n_layers, schedule
+        price_kw = dict(
+            n_heads=cfg.n_heads, head_dim=cfg.hd, n_kv_heads=cfg.n_kv_heads,
+            context=self._max_seq, n_experts=cfg.moe.n_experts,
+            top_k=cfg.moe.top_k,
         )
-        self._step_ops = cm.lm_step_ops(cfg.d_model, cfg.d_ff, cfg.n_layers)
+        self._step_cycles = cm.lm_step_cycles(
+            cfg.d_model, cfg.d_ff, cfg.n_layers, schedule, **price_kw
+        )
+        self._step_ops = cm.lm_step_ops(
+            cfg.d_model, cfg.d_ff, cfg.n_layers, **price_kw
+        )
 
-    # -- plan invalidation
+    # -- plan invalidation / hot reload
     def verify_info(self):
         return _verify_info(self)
 
@@ -227,6 +309,19 @@ class LMAdapter:
             )
         )
 
+    def install_plan(self, plan) -> None:
+        """Hot-swap to a (gateway-verified) tuned plan.  Only legal while
+        idle — the rebuild drops engine slot state."""
+        if self.has_work():
+            raise RuntimeError("install_plan with requests in flight")
+        from repro.autotune.api import apply_plan_lm
+
+        self.plan = plan
+        self.fallback_reason = None
+        self._build(apply_plan_lm(self._base_cfg, plan))
+        self._inflight.clear()
+        self._order.clear()
+
     # -- gateway protocol
     def prepare(self, payload, *, rid: int, max_new: int = 16):
         import numpy as np
@@ -244,32 +339,104 @@ class LMAdapter:
         return (len(payload.prompt) + payload.max_new) * self._step_cycles
 
     def admit(self, greq: GatewayRequest) -> int:
-        if not self.engine.admit(greq.payload):
+        if self.preemptive:
+            ok = self.engine.admit_slot(greq.payload)
+        else:
+            ok = self.engine.admit(greq.payload)
+        if not ok:
             raise RuntimeError("admit called with no free LM slot")
         greq.handle = greq.payload
         self._inflight[id(greq.handle)] = greq
+        self._order.append(greq)
+        if self.preemptive:
+            return 0  # prefill is metered through work(), chunk by chunk
         n_prefill = len(greq.payload.prompt)
         self.total_ops += n_prefill * self._step_ops
         return n_prefill * self._step_cycles
 
-    def has_work(self) -> bool:
-        return self.engine.slots.any_active()
+    def _matches(self, greq: GatewayRequest, qos: str | None) -> bool:
+        return qos is None or greq.qos == qos
 
-    def work(self, budget: int):
+    def has_work(self, qos: str | None = None) -> bool:
+        return any(
+            self._matches(g, qos) and not g.done
+            for g in self._inflight.values()
+        )
+
+    def _ready_slots(self, qos: str | None):
+        return [
+            (i, r) for i, r in self.engine.ready_slots()
+            if id(r) in self._inflight
+            and self._matches(self._inflight[id(r)], qos)
+        ]
+
+    def work(self, budget: int, qos: str | None = None, force: bool = False,
+             soft_limit: int | None = None):
         consumed = 0
         completed: list[GatewayRequest] = []
-        while consumed < budget:
-            n_active = len(self.engine.slots.active())
-            if n_active == 0:
+        sc = self._step_cycles
+        if self.preemptive:
+            # 1. chunked prefill, admission order: each token charged at
+            # the step price as it enters the cache; an unaffordable
+            # remainder yields to the next round instead of overdrafting
+            for greq in list(self._order):
+                if greq.done or not self._matches(greq, qos):
+                    continue
+                h = greq.handle
+                if h.prefill_remaining <= 0:
+                    continue
+                n = min((budget - consumed) // sc, h.prefill_remaining)
+                if soft_limit is not None:
+                    # tokens may start only before the segment boundary
+                    # (the last one may run across it)
+                    n_soft = -(-max(soft_limit - consumed, 0) // sc)
+                    n = min(n, n_soft)
+                if n <= 0 and force and consumed == 0:
+                    n = 1  # forced progress: one token, overdraft recorded
+                if n <= 0:
+                    break
+                force = False
+                self.engine.prefill(h, int(n))
+                consumed += n * sc
+                self.total_ops += n * self._step_ops
+                if h.prefill_remaining:
+                    break  # budget exhausted mid-prompt
+        # 2. decode steps — class-scoped under the preemptive path *when
+        # the family supports slot isolation* (the per-slot cache index:
+        # excluded rows' junk writes land at their own positions and are
+        # overwritten before read).  Recurrent/scalar-index families have
+        # no position-addressed state, so a subset step would corrupt the
+        # excluded rows — they decode every ready slot instead, charged
+        # to the invoking class.  The atomic path always decodes every
+        # ready slot (PR 4 semantics).
+        scoped = self.preemptive and self.engine._vector_index
+        while True:
+            slots = self._ready_slots(qos)
+            if not slots:
                 break
-            finished = self.engine.step()
-            consumed += self._step_cycles * n_active
-            self.total_ops += self._step_ops * n_active
+            decoding = slots if scoped else self.engine.ready_slots()
+            cost = sc * len(decoding)
+            if self.preemptive:
+                over_hard = consumed + cost > budget
+                at_soft = soft_limit is not None and consumed >= soft_limit
+                if (over_hard or at_soft) and not (force and consumed == 0):
+                    break
+            elif consumed >= budget:
+                break
+            force = False
+            finished = self.engine.step(
+                only={i for i, _ in slots} if scoped else None
+            )
+            consumed += cost
+            self.total_ops += self._step_ops * len(decoding)
             completed.extend(
                 self._inflight.pop(id(r))
                 for r in finished
                 if id(r) in self._inflight
             )
+        for greq in completed:
+            if greq in self._order:
+                self._order.remove(greq)
         return consumed, completed, []
 
 
@@ -277,21 +444,28 @@ class SegAdapter:
     """Tiled segmentation behind the gateway protocol.
 
     ``plan`` serves a tuned operating point through
-    :func:`repro.autotune.api.engine_from_plan` semantics and arms the
+    :func:`repro.autotune.api.apply_plan` semantics and arms the
     fingerprint check; without one the engine serves ``cfg`` as given.
     Work is the engine's own micro-batch step, charged at the summed
-    relation-(2) price of the tiles it emitted; emitted
-    :class:`~repro.segserve.engine.TileEvent` s pass through to the
-    gateway's progressive stream.
+    relation-(2) price of the tiles it emitted.  Requests are labeled with
+    their QoS class as the engine's tile *group*, so tiles of different
+    classes never share a micro-batch and a class's quantum pays exactly
+    for its own tiles.  Under ``preemptive=True`` a micro-batch whose
+    price exceeds the remaining budget is not started (the quantum
+    carries); ``preemptive=False`` restores the PR 4 atomic loop.
+    Emitted :class:`~repro.segserve.engine.TileEvent` s pass through to
+    the gateway's progressive stream.
     """
 
     kind = "seg"
 
-    def __init__(self, cfg, params, *, plan=None, **engine_kw):
+    def __init__(self, cfg, params, *, plan=None, preemptive: bool = True,
+                 **engine_kw):
         self.plan = plan
         self.params = params
         self._base_cfg = cfg
         self._engine_kw = dict(engine_kw)
+        self.preemptive = bool(preemptive)
         self.fallback_reason: str | None = None
         self._build(cfg, plan)
         self._inflight: dict[int, GatewayRequest] = {}
@@ -308,7 +482,7 @@ class SegAdapter:
         self.engine = SegEngine(cfg, self.params, plan=plan, **self._engine_kw)
         self._base_planes = tuple(self.engine._class_planes(0))
 
-    # -- plan invalidation
+    # -- plan invalidation / hot reload
     def verify_info(self):
         return _verify_info(self)
 
@@ -328,6 +502,16 @@ class SegAdapter:
             ),
             None,
         )
+
+    def install_plan(self, plan) -> None:
+        """Hot-swap to a (gateway-verified) tuned plan.  Only legal while
+        idle — the rebuild drops canvases and the task table."""
+        if self.has_work() or self._inflight:
+            raise RuntimeError("install_plan with requests in flight")
+        self.fallback_reason = None
+        self.plan = plan
+        self._build(self._base_cfg, plan)
+        self._inflight.clear()
 
     # -- gateway protocol
     def prepare(self, payload, *, rid: int):
@@ -357,7 +541,7 @@ class SegAdapter:
         )
 
     def admit(self, greq: GatewayRequest) -> int:
-        handle = self.engine.submit(greq.payload)
+        handle = self.engine.submit(greq.payload, group=greq.qos)
         if not self.engine.queue.pump(self.engine.slots, self.engine._admit):
             raise RuntimeError("admit called with no free seg slot")
         greq.handle = handle
@@ -365,15 +549,32 @@ class SegAdapter:
         self._inflight[handle.rid] = greq
         return 0  # tile planning is host work, not accelerator cycles
 
-    def has_work(self) -> bool:
-        return bool(self.engine._tasks)
+    def has_work(self, qos: str | None = None) -> bool:
+        if qos is None:
+            return self.engine.has_work()
+        return self.engine.has_work(group=qos)
 
-    def work(self, budget: int):
+    def work(self, budget: int, qos: str | None = None, force: bool = False,
+             soft_limit: int | None = None):
         consumed = 0
         completed: list[GatewayRequest] = []
         events = []
-        while consumed < budget and self.engine._tasks:
-            evs = self.engine.step()
+        group = ... if qos is None else qos
+        while True:
+            cost = self.engine.next_cost(group)
+            if cost == 0:
+                break
+            if self.preemptive:
+                # the preemption point: a micro-batch that would overdraft
+                # the quantum yields; the deficit carries to the next round
+                over_hard = consumed + cost > budget
+                at_soft = soft_limit is not None and consumed >= soft_limit
+                if (over_hard or at_soft) and not (force and consumed == 0):
+                    break
+            elif consumed >= budget:
+                break
+            force = False
+            evs = self.engine.step(group)
             for ev in evs:
                 consumed += ev.cycles
                 if ev.done:
@@ -398,8 +599,13 @@ class Gateway:
       policy: ``'fifo' | 'fair' | 'edf'`` (see module docstring).
       round_budget: modeled cycles one scheduling round may spend across
         all engines — the co-scheduling knob.
-      shares: per-kind fair-share fractions (default: equal).  Must sum
-        to <= 1; unallocated share is work-conserving slack.
+      shares: per-*class* fair-share fractions.  Keys are scheduling
+        classes: an adapter kind (the default class of its unlabeled
+        requests) or a QoS label requests carry (``submit(..., qos=...)``).
+        Every submitted request's class must be declared here — submit
+        rejects undeclared classes, so no class can silently arrive
+        share-less.  Must sum to <= 1; unallocated share is
+        work-conserving slack.  Default: equal across kinds.
       on_stale: ``'reject'`` (raise :class:`StalePlanError` at submission)
         or ``'fallback'`` (quarantine the plan, serve the uniform
         schedule) when a tuned plan's fingerprint mismatches the served
@@ -438,19 +644,14 @@ class Gateway:
         kinds = list(self.adapters)
         if shares is None:
             shares = {k: 1.0 / len(kinds) for k in kinds}
-        unknown = set(shares) - set(kinds)
-        if unknown:
-            raise ValueError(f"shares for unknown kinds {sorted(unknown)}")
-        missing = set(kinds) - set(shares)
-        if missing:
-            # a silently share-less class would void the starvation-freedom
-            # guarantee the fair policy exists for
-            raise ValueError(
-                f"explicit shares must cover every served kind; missing "
-                f"{sorted(missing)}"
-            )
         if any(s <= 0 for s in shares.values()) or sum(shares.values()) > 1 + 1e-9:
             raise ValueError(f"shares must be positive and sum <= 1: {shares}")
+        # No silent share-less class: every request's scheduling class must
+        # be declared here — submit() rejects undeclared classes loudly
+        # (including a kind's own default class when traffic arrives
+        # unlabeled), so the starvation-freedom guarantee cannot be voided
+        # by an un-shared class slipping in.
+        # keys beyond the kinds declare QoS classes requests may carry
         self.shares = dict(shares)
         self.queue: FifoQueue[GatewayRequest] = FifoQueue()
         self.requests: list[GatewayRequest] = []
@@ -459,27 +660,44 @@ class Gateway:
         # emitted tile); long-running consumers should pass on_event and
         # clear this list between reporting windows.
         self.tile_events: list = []
-        self.clock = 0  # modeled cycles
+        self.clock = 0  # modeled cycles (round start while stepping)
         self.rounds = 0
-        self._deficit = {k: 0.0 for k in kinds}
-        self._admit_charges = {k: 0 for k in kinds}
+        self.forced = 0  # forced-progress overdraft steps (liveness)
+        self._deficit = {c: 0.0 for c in self.shares}
+        self._admit_charges: dict[str, int] = {}
+        self._round_spent = 0  # intra-round modeled time (work + idle)
+        self._round_worked = 0  # cycles actually consumed this round
+        self._round_class_worked: dict[str, int] = {}  # per-class, per-round
+        self._granted = set()  # classes granted quantum this round
+        self._class_stalled: dict[str, int] = {}  # consecutive dry rounds
+        self._pending_swap: dict[str, Any] = {}
+        self.plan_swaps: list[dict] = []  # installed hot-reloads
         self._next_rid = 0
 
     # ------------------------------------------------------------- submit
 
-    def submit(self, kind: str, payload, *, deadline_cycles: int | None = None,
-               **prepare_kw) -> GatewayRequest:
+    def submit(self, kind: str, payload, *, qos: str | None = None,
+               deadline_cycles: int | None = None,
+               arrival_cycle: int | None = None, **prepare_kw
+               ) -> GatewayRequest:
         """Type, verify and enqueue one request.
 
-        Admission control starts here: the adapter's tuned plan (if any)
-        is verified against its served params *before* the request may
-        enter the system — a stale certificate rejects (or falls back)
-        now, not after cycles were spent.
-        """
+        ``qos`` is the scheduling class (defaults to ``kind``); a non-kind
+        class must be declared in ``shares``.  ``arrival_cycle`` stamps the
+        request's arrival on the modeled clock (the open-loop replay path;
+        defaults to the current clock).  Admission control starts here:
+        the adapter's tuned plan (if any) is verified against its served
+        params *before* the request may enter the system."""
         if kind not in self.adapters:
             raise ValueError(
                 f"unknown request kind {kind!r}; served kinds: "
                 f"{sorted(self.adapters)}"
+            )
+        qos = kind if qos is None else str(qos)
+        if qos not in self.shares:
+            raise ValueError(
+                f"undeclared QoS class {qos!r}: declare it in shares= "
+                f"(declared: {sorted(self.shares)})"
             )
         adapter = self.adapters[kind]
         _check_plan(adapter, self.on_stale)
@@ -487,24 +705,71 @@ class Gateway:
         self._next_rid += 1
         payload = adapter.prepare(payload, rid=rid, **prepare_kw)
         est = int(adapter.estimate_cycles(payload))
+        arrival = self.clock if arrival_cycle is None else int(arrival_cycle)
         if deadline_cycles is None:
-            deadline = self.clock + math.ceil(self.deadline_factor * est)
+            deadline = arrival + math.ceil(self.deadline_factor * est)
         else:
-            deadline = self.clock + int(deadline_cycles)
+            deadline = arrival + int(deadline_cycles)
         greq = GatewayRequest(
-            rid=rid, kind=kind, payload=payload, est_cycles=est,
-            deadline=deadline, arrival=self.clock,
+            rid=rid, kind=kind, qos=qos, payload=payload, est_cycles=est,
+            deadline=deadline, arrival=arrival,
             arrival_round=self.rounds,
         )
         self.queue.push(greq)
         self.requests.append(greq)
         return greq
 
+    # --------------------------------------------------------- hot reload
+
+    def swap_plan(self, kind: str, plan) -> None:
+        """Queue a verified tuned plan for installation at a round
+        boundary (plan hot-reload).
+
+        The plan's ``params_fingerprint`` is re-verified against the
+        served weights *now* — an operator swapping in a plan tuned for
+        different weights gets :class:`StalePlanError` immediately, naming
+        both fingerprints.  Installation waits until the adapter is idle:
+        admission to ``kind`` is held (its queued requests wait), in-flight
+        requests drain under the old plan, and the new plan installs at
+        the next round boundary, after which admission resumes.
+        """
+        if kind not in self.adapters:
+            raise ValueError(f"unknown kind {kind!r}")
+        adapter = self.adapters[kind]
+        if not hasattr(adapter, "install_plan"):
+            raise TypeError(f"adapter {kind!r} does not support plan swaps")
+        plan_fp = _plan_fingerprint(plan)
+        served_fp = _served_fingerprint(adapter)
+        if plan_fp != served_fp:
+            raise StalePlanError(
+                f"refusing to hot-swap a stale plan onto {kind!r}: plan "
+                f"fingerprint {plan_fp} vs served params fingerprint "
+                f"{served_fp}"
+            )
+        self._pending_swap[kind] = plan
+        self._install_pending_swaps()
+
+    def _install_pending_swaps(self) -> None:
+        for kind in list(self._pending_swap):
+            adapter = self.adapters[kind]
+            if adapter.has_work() or any(
+                g.kind == kind for g in self._live.values()
+            ):
+                continue  # drain first; admission to this kind is held
+            plan = self._pending_swap.pop(kind)
+            adapter.install_plan(plan)
+            self.plan_swaps.append(
+                dict(kind=kind, round=self.rounds,
+                     fingerprint=plan.fingerprint)
+            )
+
     # ---------------------------------------------------------- admission
 
     def _try_admit(self, idx: int) -> bool:
         """Admit the ``idx``-th queued request if its engine has a slot."""
         greq = self.queue.peek(idx)
+        if greq.kind in self._pending_swap:
+            return False  # admission held until the plan swap installs
         adapter = self.adapters[greq.kind]
         if adapter.free_slots() < 1:
             return False
@@ -513,8 +778,15 @@ class Gateway:
         greq.admitted = self.clock
         greq.admitted_round = self.rounds
         self._live[greq.rid] = greq
-        self._admit_charges[greq.kind] += int(charged)
+        if charged:
+            self._admit_charges[greq.qos] = (
+                self._admit_charges.get(greq.qos, 0) + int(charged)
+            )
         return True
+
+    def _classes(self) -> list[str]:
+        """Scheduling classes, declared-share order (kinds + QoS labels)."""
+        return list(self.shares)
 
     def _admission_phase(self) -> None:
         if self.policy == "fifo":
@@ -528,9 +800,9 @@ class Gateway:
             progress = True
             while progress and self.queue:
                 progress = False
-                for kind in self.adapters:
+                for c in self._classes():
                     idx = next(
-                        (i for i, g in enumerate(self.queue) if g.kind == kind),
+                        (i for i, g in enumerate(self.queue) if g.qos == c),
                         None,
                     )
                     if idx is not None and self._try_admit(idx):
@@ -559,26 +831,37 @@ class Gateway:
         the gateway's own live-request table — adapters owe the protocol
         nothing about how they track in-flight work, and completed history
         is never rescanned."""
-        live_by_kind: dict[str, list[GatewayRequest]] = {}
+        live_by_class: dict[str, list[GatewayRequest]] = {}
         for g in self._live.values():
-            live_by_kind.setdefault(g.kind, []).append(g)
+            live_by_class.setdefault(g.qos, []).append(g)
 
-        def urgency(kind: str):
-            live = live_by_kind.get(kind)
+        def urgency(c: str):
+            live = live_by_class.get(c)
             if not live:
                 return (1, 0)
             if self.policy == "edf":
                 return (0, min(g.deadline for g in live))
             return (0, min(g.arrival for g in live))
 
-        return sorted(self.adapters, key=urgency)
+        return sorted(self._classes(), key=urgency)
 
-    def _do_work(self, kind: str, budget: float, spent_before: int):
+    def _class_has_work(self, c: str) -> bool:
+        return any(a.has_work(qos=c) for a in self.adapters.values())
+
+    def _do_work(self, kind: str, budget: float, qos: str | None,
+                 force: bool = False, soft: float | None = None) -> int:
         adapter = self.adapters[kind]
-        consumed, completed, events = adapter.work(int(budget))
-        stamp = self.clock + min(
-            spent_before + consumed, self.round_budget
+        consumed, completed, events = adapter.work(
+            int(budget), qos=qos, force=force,
+            soft_limit=None if soft is None else int(soft),
         )
+        self._round_spent += consumed
+        self._round_worked += consumed
+        if qos is not None:
+            self._round_class_worked[qos] = (
+                self._round_class_worked.get(qos, 0) + consumed
+            )
+        stamp = self.clock + min(self._round_spent, self.round_budget)
         for greq in completed:
             greq.finished = stamp
             greq.finished_round = self.rounds
@@ -592,49 +875,185 @@ class Gateway:
                 self.on_event(ev)
         return consumed
 
-    def _execution_phase(self) -> None:
-        spent = 0
-        # prefill charged at admission eats into the round before decode
-        for kind, charged in self._admit_charges.items():
-            spent += charged
-            if self.policy == "fair":
-                self._deficit[kind] -= charged
-            self._admit_charges[kind] = 0
+    def _work_class(self, c: str, budget: float, force: bool = False,
+                    soft: float | None = None) -> int:
+        """Offer ``budget`` cycles (hard bound) to class ``c`` across its
+        adapters; ``soft`` is the segment boundary no new step may start
+        past."""
+        used_total = 0
+        for kind, adapter in self.adapters.items():
+            if used_total >= budget and not force:
+                break
+            if adapter.has_work(qos=c):
+                used = self._do_work(
+                    kind, budget - used_total, c,
+                    force=force and used_total == 0,
+                    soft=None if soft is None else max(soft - used_total, 0),
+                )
+                used_total += used
+                if used:
+                    force = False
+        return used_total
 
-        if self.policy == "fair":
-            for kind, share in self.shares.items():
-                if self.adapters[kind].has_work() or self._deficit[kind] < 0:
-                    self._deficit[kind] += share * self.round_budget
-                else:
-                    self._deficit[kind] = 0.0  # no banking while idle
-            for kind in self.adapters:
-                if self._deficit[kind] > 0 and self.adapters[kind].has_work():
-                    used = self._do_work(kind, self._deficit[kind], spent)
-                    self._deficit[kind] -= used
-                    spent += used
-        else:
-            for kind in self._class_order():
-                if spent >= self.round_budget:
-                    break
-                if self.adapters[kind].has_work():
-                    spent += self._do_work(
-                        kind, self.round_budget - spent, spent
+    def _apply_admit_charges(self) -> None:
+        """Atomic-mode prefill charges (PR 4 semantics): eat into the round
+        before any micro-step, debited from the class's quantum — the
+        overdraft the preemptive path exists to avoid."""
+        for qos in list(self._admit_charges):
+            charged = self._admit_charges.pop(qos)
+            if charged:
+                self._round_spent += charged
+                if self.policy == "fair":
+                    self._deficit[qos] = (
+                        self._deficit.get(qos, 0.0) - charged
                     )
 
-        # work-conserving: hand leftover budget to any class with work
-        guard = len(self.adapters) + 1
-        while spent < self.round_budget and guard:
-            guard -= 1
-            busy = [k for k in self.adapters if self.adapters[k].has_work()]
-            if not busy:
+    def _accrue_quanta(self) -> None:
+        self._granted = set()
+        for c, share in self.shares.items():
+            if self._class_has_work(c) or self._deficit[c] < 0:
+                self._deficit[c] += share * self.round_budget
+                self._granted.add(c)
+            else:
+                self._deficit[c] = 0.0  # no banking while idle
+
+    def _grant_midround(self) -> None:
+        """Quantum for a class that became backlogged mid-round (open-loop
+        arrival after the round-start accrual): its share of the round's
+        *remaining* capacity — it was absent for the part already spent,
+        so the grant is pro-rated, never retroactive."""
+        if self.policy != "fair":
+            return
+        remaining = max(self.round_budget - self._round_spent, 0)
+        for c, share in self.shares.items():
+            if c not in self._granted and self._class_has_work(c):
+                self._deficit[c] += share * remaining
+                self._granted.add(c)
+
+    def _execute(self, limit: float) -> None:
+        """Spend modeled cycles until the round's intra-round clock
+        reaches ``limit`` or no class can start an affordable micro-step.
+        Called multiple times per round — mid-round arrivals partition the
+        round into segments at their stamped offsets.  Modeled time flows
+        to the segment boundary regardless: capacity nobody could (or was
+        entitled to) use before an arrival is spent as idle, never banked
+        — so completion stamps after an arrival are never earlier than
+        the arrival itself."""
+        limit = min(int(limit), self.round_budget)
+        self._apply_admit_charges()
+        progress = True
+        while progress and self._round_spent < limit:
+            progress = False
+            soft = limit - self._round_spent  # segment boundary offset
+            room = self.round_budget - self._round_spent  # physical round
+            if room < 1:
                 break
-            for kind in busy:
-                if spent >= self.round_budget:
-                    break
-                used = self._do_work(kind, self.round_budget - spent, spent)
-                if self.policy == "fair":
-                    self._deficit[kind] -= used
-                spent += used
+            if self.policy == "fair":
+                # largest-deficit-first: when round capacity only fits one
+                # micro-step, a fixed iteration order would systematically
+                # serve earlier-declared classes and stall the rest even
+                # as their banked quanta grow — the class with the most
+                # credit goes first (stable sort: declared order on ties)
+                order = sorted(
+                    self._classes(),
+                    key=lambda c: -self._deficit.get(c, 0.0),
+                )
+                for c in order:
+                    soft = limit - self._round_spent
+                    room = self.round_budget - self._round_spent
+                    if soft <= 0 or room < 1:
+                        break
+                    budget = min(self._deficit.get(c, 0.0), room)
+                    if budget < 1:
+                        continue
+                    used = self._work_class(c, budget, soft=soft)
+                    if used:
+                        # preemptive adapters never exceed the offered
+                        # budget, so the quantum is never driven negative;
+                        # an atomic adapter's overshoot past the budget is
+                        # real service and stays as debt (PR 4 semantics)
+                        # rather than being forgiven by the floor
+                        if used <= budget:
+                            self._deficit[c] = max(
+                                self._deficit[c] - used, 0.0
+                            )
+                        else:
+                            self._deficit[c] -= used
+                        progress = True
+                if not progress:
+                    # quanta exhausted (or unaffordable) with budget left:
+                    # work-conserving slack, un-charged (quanta stay
+                    # non-negative), handed out in urgency order — the
+                    # oldest live class first, not declaration order
+                    for c in self._class_order():
+                        soft = limit - self._round_spent
+                        room = self.round_budget - self._round_spent
+                        if soft <= 0 or room < 1:
+                            break
+                        used = self._work_class(c, room, soft=soft)
+                        if used:
+                            progress = True
+            else:
+                for c in self._class_order():
+                    soft = limit - self._round_spent
+                    room = self.round_budget - self._round_spent
+                    if soft <= 0 or room < 1:
+                        break
+                    if self._work_class(c, room, soft=soft):
+                        progress = True
+        # idle time flows: the intra-round clock reaches the boundary
+        self._round_spent = max(self._round_spent, limit)
+
+    def _stall_limit(self) -> int:
+        """Consecutive zero-progress rounds that prove a class's cheapest
+        pending micro-step can never fit a round budget.  Under fair, a
+        backlogged class's quantum grows by share x round_budget per
+        round, so after ceil(1/min_share) rounds its deficit exceeds a
+        full round budget — further stalling means the step itself is
+        bigger than a round.  Other policies offer the whole round every
+        round."""
+        if self.policy == "fair":
+            return math.ceil(1.0 / min(self.shares.values())) + 1
+        return 1
+
+    def _check_starvation(self) -> None:
+        """Liveness escape for micro-steps larger than a whole round.
+
+        Under ``fair`` the check is *per class*: a class with pending work
+        and zero progress for ``_stall_limit`` consecutive rounds — even
+        while other classes kept the gateway busy — is holding a step its
+        ever-growing quantum can never fit inside a round; run exactly one
+        such step, overdraft and all, and leave the overdraft as quantum
+        debt so the class repays it.  Under ``fifo``/``edf`` per-class
+        starvation is the *policy's own semantics* (head-of-line blocking
+        is what FIFO means), so only a globally idle round with work
+        pending — nothing anywhere could start — triggers the escape.
+        Forced steps are counted in ``stats()['forced']`` — a
+        modeled-capacity smell either way."""
+        if self.policy != "fair":
+            if self._round_worked == 0 and any(
+                a.has_work() for a in self.adapters.values()
+            ):
+                for c in self._class_order():
+                    if self._class_has_work(c):
+                        if self._work_class(c, self.round_budget,
+                                            force=True):
+                            self.forced += 1
+                            return
+            return
+        for c in self._classes():
+            if not self._class_has_work(c) or \
+                    self._round_class_worked.get(c, 0) > 0:
+                self._class_stalled[c] = 0
+                continue
+            self._class_stalled[c] = self._class_stalled.get(c, 0) + 1
+            if self._class_stalled[c] < self._stall_limit():
+                continue
+            used = self._work_class(c, self.round_budget, force=True)
+            if used:
+                self.forced += 1
+                self._deficit[c] = self._deficit.get(c, 0.0) - used
+            self._class_stalled[c] = 0
 
     # ------------------------------------------------------------- rounds
 
@@ -643,13 +1062,54 @@ class Gateway:
             a.has_work() for a in self.adapters.values()
         )
 
-    def step_round(self) -> None:
+    def step_round(self, arrivals=()) -> None:
         """One scheduling round: admit per policy, execute against the
-        shared cycle budget, advance the modeled clock."""
+        shared cycle budget, advance the modeled clock.
+
+        ``arrivals`` is an iterable of ``(cycle, kind, payload, kwargs)``
+        tuples injected open-loop: execution runs to each arrival's offset
+        within the round, the request is submitted with its stamped
+        ``arrival_cycle``, and a mid-round admission pass runs before
+        execution resumes — so a request arriving mid-round can be served
+        in the same round instead of waiting for the next boundary.
+        Arrivals stamped at or past the round's end are rejected (a
+        future-stamped request admitted early could finish before it
+        "arrived" and corrupt the latency account) — feed each round only
+        its own window, as ``workload.replay`` does.
+        """
+        arr = sorted(arrivals, key=lambda a: a[0])
+        if arr and arr[-1][0] >= self.clock + self.round_budget:
+            raise ValueError(
+                f"arrival stamped at cycle {arr[-1][0]} is outside this "
+                f"round [{self.clock}, {self.clock + self.round_budget}) — "
+                f"defer it to its own round"
+            )
+        self._round_spent = 0
+        self._round_worked = 0
+        self._round_class_worked = {}
+        self._install_pending_swaps()
+        # backlog: arrivals stamped at or before the round start
+        while arr and arr[0][0] <= self.clock:
+            cyc, kind, payload, kw = arr.pop(0)
+            self.submit(kind, payload, arrival_cycle=cyc, **kw)
         self._admission_phase()
-        self._execution_phase()
+        if self.policy == "fair":
+            self._accrue_quanta()
+        for cyc, kind, payload, kw in arr:
+            self._execute(max(cyc - self.clock, 0))
+            self.submit(kind, payload, arrival_cycle=cyc, **kw)
+            self._admission_phase()
+            self._grant_midround()
+        self._execute(self.round_budget)
+        self._check_starvation()
         self.clock += self.round_budget
         self.rounds += 1
+
+    def advance_to(self, cycle: int) -> None:
+        """Run scheduling rounds until the modeled clock reaches
+        ``cycle`` (the open-loop replay idle path)."""
+        while self.clock < cycle:
+            self.step_round()
 
     def drain(self, *, max_rounds: int = 100_000) -> None:
         """Run rounds until nothing is queued or in flight."""
@@ -664,18 +1124,22 @@ class Gateway:
     # -------------------------------------------------------------- stats
 
     def stats(self) -> dict:
-        """Per-class modeled-latency distribution + aggregate GOPS/W."""
+        """Per-class modeled-latency distribution + aggregate GOPS/W.
+        Classes are QoS labels (adapter kinds for unlabeled traffic)."""
         import numpy as np
 
+        classes = list(self.shares)
+        for g in self.requests:
+            if g.qos not in classes:
+                classes.append(g.qos)
         per_class: dict[str, dict] = {}
-        for kind in self.adapters:
-            lats = [
-                g.latency_ms for g in self.requests
-                if g.kind == kind and g.done
-            ]
-            n_total = sum(1 for g in self.requests if g.kind == kind)
-            per_class[kind] = dict(
-                n=n_total,
+        for c in classes:
+            of_c = [g for g in self.requests if g.qos == c]
+            if not of_c and c not in self.adapters:
+                continue
+            lats = [g.latency_ms for g in of_c if g.done]
+            per_class[c] = dict(
+                n=len(of_c),
                 completed=len(lats),
                 p50_ms=float(np.percentile(lats, 50)) if lats else None,
                 p99_ms=float(np.percentile(lats, 99)) if lats else None,
@@ -696,6 +1160,8 @@ class Gateway:
             total_ops=total_ops,
             gops=gops,
             gops_w=gops / power,
+            forced=self.forced,
+            plan_swaps=list(self.plan_swaps),
             fallbacks={
                 k: a.fallback_reason
                 for k, a in self.adapters.items()

@@ -1,0 +1,18 @@
+"""Workload subsystem: trace-driven open-loop load generation.
+
+Three layers, one artifact:
+
+* :mod:`repro.workload.arrivals` — seeded arrival processes (deterministic
+  / Poisson / Markov-modulated on-off bursts) on the modeled cycle clock,
+  pure functions of ``(seed, index)`` via a counter PRNG;
+* :mod:`repro.workload.trace` — the versioned, serialized
+  :class:`~repro.workload.trace.Trace` schema (request kind + payload spec
+  + QoS class + arrival cycle + deadline), persisted atomically; canonical
+  traces live under ``traces/`` in the repo root;
+* :mod:`repro.workload.replay` — the open-loop harness that injects a
+  trace's arrivals *inside* gateway rounds at their stamped cycles and
+  summarizes per-class latency / GOPS-per-W in the bench tracker schema.
+"""
+from . import arrivals, replay, trace  # noqa: F401
+from .replay import lm_materializer, replay as replay_trace, seg_materializer  # noqa: F401
+from .trace import Trace, TraceRequest, from_streams  # noqa: F401

@@ -1,0 +1,156 @@
+"""Open-loop trace replay against the serving gateway.
+
+The harness walks a :class:`~repro.workload.trace.Trace` on the gateway's
+modeled cycle clock: each round, the arrivals stamped inside that round's
+cycle span are handed to :meth:`Gateway.step_round`, which injects them
+*mid-round* at their exact offsets (execution runs to the stamp, the
+request is submitted with ``arrival_cycle`` set, a mid-round admission
+pass runs, execution resumes).  Arrivals never wait for completions —
+the load is open-loop, so queueing delay shows up as latency instead of
+silently throttling the generator.
+
+Payloads are materialized from each request's compact spec and the trace
+seed (deterministic per request index), so replaying the same trace twice
+— or on different machines — submits bit-identical prompts and images.
+
+``replay`` returns a summary in the shared bench-tracker schema: one row
+per QoS class (modeled p50/p99 latency) plus the aggregate GOPS/W row,
+and the raw per-class stats dict for programmatic gates.
+"""
+from __future__ import annotations
+
+from repro.core import cycle_model as cm
+
+from .trace import Trace, TraceRequest
+
+
+# ----------------------------------------------------------- materializers
+#
+# A materializer turns a TraceRequest's payload *spec* into the engine-
+# native payload plus submit() keyword arguments.  Determinism contract:
+# the result is a pure function of (trace seed, request index, spec).
+
+
+def _rng(trace_seed: int, index: int):
+    import numpy as np
+
+    return np.random.default_rng((int(trace_seed), int(index)))
+
+
+def lm_materializer(vocab: int):
+    """Prompts of ``prompt_len`` uniform tokens from a ``vocab``."""
+
+    def mat(treq: TraceRequest, trace_seed: int, index: int):
+        spec = treq.payload
+        prompt = _rng(trace_seed, index).integers(
+            0, vocab, size=int(spec["prompt_len"])
+        )
+        return prompt, dict(max_new=int(spec["max_new"]))
+
+    return mat
+
+
+def seg_materializer(in_ch: int):
+    """Synthetic phantom images at the spec's (h, w) geometry."""
+
+    def mat(treq: TraceRequest, trace_seed: int, index: int):
+        from repro.segserve.synth import phantom_image
+
+        spec = treq.payload
+        # phantom_image seeds its own rng; fold the request index in so
+        # every image differs but replays identically
+        return phantom_image(
+            int(spec["h"]), int(spec["w"]), in_ch,
+            seed=int(trace_seed) * 100_003 + index,
+        ), {}
+
+    return mat
+
+
+# ----------------------------------------------------------------- replay
+
+
+def replay(
+    gateway,
+    trace: Trace,
+    materializers: dict,
+    *,
+    max_rounds: int = 100_000,
+) -> dict:
+    """Drive ``gateway`` through ``trace`` open-loop; returns the summary.
+
+    ``materializers`` maps adapter kind to a materializer (see
+    :func:`lm_materializer` / :func:`seg_materializer`).  Every QoS class
+    the trace carries must be declared in the gateway's ``shares``.
+    """
+    missing = set(trace.kinds) - set(gateway.adapters)
+    if missing:
+        raise ValueError(
+            f"trace {trace.name!r} needs adapters for kinds "
+            f"{sorted(missing)}"
+        )
+    undeclared = set(trace.qos_classes) - set(gateway.shares)
+    if undeclared:
+        raise ValueError(
+            f"trace {trace.name!r} carries QoS classes {sorted(undeclared)} "
+            f"not declared in gateway shares {sorted(gateway.shares)}"
+        )
+    feed = []
+    for idx, treq in enumerate(trace.requests):
+        payload, prep_kw = materializers[treq.kind](treq, trace.seed, idx)
+        kw = dict(qos=treq.qos, **prep_kw)
+        if treq.deadline_cycles is not None:
+            kw["deadline_cycles"] = treq.deadline_cycles
+        feed.append((treq.arrival_cycle, treq.kind, payload, kw))
+
+    i = 0
+    while i < len(feed) or gateway.pending():
+        if gateway.rounds >= max_rounds:
+            raise RuntimeError(
+                f"replay of {trace.name!r} did not drain within "
+                f"{max_rounds} rounds"
+            )
+        window_end = gateway.clock + gateway.round_budget
+        due = []
+        while i < len(feed) and feed[i][0] < window_end:
+            due.append(feed[i])
+            i += 1
+        gateway.step_round(arrivals=due)
+    return summarize(gateway, trace)
+
+
+def summarize(gateway, trace: Trace) -> dict:
+    """The replay summary in the shared bench-tracker schema."""
+    st = gateway.stats()
+    rows = []
+    for qos, pc in st["per_class"].items():
+        if pc["n"] == 0 or not pc["completed"]:
+            continue
+        rows.append(
+            (
+                f"replay/{trace.name}/{gateway.policy}/{qos}",
+                (pc["p99_ms"] or 0.0) * 1e3,  # modeled us, like segserve
+                f"n={pc['n']};completed={pc['completed']};"
+                f"p50_ms={pc['p50_ms']:.3f};p99_ms={pc['p99_ms']:.3f}",
+            )
+        )
+    return dict(
+        trace=dict(
+            name=trace.name,
+            version=trace.version,
+            seed=trace.seed,
+            n_requests=len(trace),
+            span_cycles=trace.span_cycles,
+            qos_classes=trace.qos_classes,
+        ),
+        policy=gateway.policy,
+        rounds=st["rounds"],
+        clock_cycles=st["clock_cycles"],
+        time_ms=st["clock_cycles"] / cm.FREQ_HZ * 1e3,
+        total_ops=st["total_ops"],
+        gops=st["gops"],
+        gops_w=st["gops_w"],
+        per_class=st["per_class"],
+        forced=st["forced"],
+        rows=rows,
+    )

@@ -125,6 +125,99 @@ def test_gateway_latency_shift_warns_but_does_not_fail():
     )
 
 
+GATEWAY_TRACED = dict(
+    bench="gateway",
+    gate=dict(minority="seg"),
+    trace=dict(name="gateway_burst", version=1),
+    rows=[
+        dict(policy="fair", gops_w=1.2,
+             per_class=dict(
+                 seg=dict(p99_ms=20.0),
+                 interactive=dict(p99_ms=10.0),
+             )),
+    ],
+)
+
+
+def test_gateway_rows_key_on_trace_schema():
+    """A trace-schema bump (or trace rename) is a target change: rows from
+    different trace versions must be skipped, never diffed — the satellite
+    guard for workload evolution."""
+    # old (pre-trace) baseline vs new traced payload: skipped
+    entries = bd.diff_file("f", GATEWAY, copy.deepcopy(GATEWAY_TRACED),
+                           gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    assert any(e["status"] == "skipped" for e in entries)
+    # same trace: a GOPS/W drop is a real regression again
+    new = copy.deepcopy(GATEWAY_TRACED)
+    new["rows"][0]["gops_w"] = 0.5
+    assert _regressions(
+        bd.diff_file("f", GATEWAY_TRACED, new, gops_w_tol=0.05,
+                     cert_tol=0.01)
+    )
+    # version bump: the same drop is skipped
+    new["trace"]["version"] = 2
+    entries = bd.diff_file("f", GATEWAY_TRACED, new, gops_w_tol=0.05,
+                           cert_tol=0.01)
+    assert not _regressions(entries)
+    assert any(e["status"] == "skipped" for e in entries)
+
+
+# ------------------------------------------------------------------ ledger
+
+
+def test_headline_metrics_shapes():
+    seg = dict(bench="segserve", target_rel_err=0.05,
+               gate=dict(cert=0.03),
+               rows=[dict(name="uniform", gops_w=4.0),
+                     dict(name="adaptive", gops_w=13.0)])
+    hm = bd.headline_metrics(seg)
+    assert hm == dict(target=0.05, gops_w=13.0, cert=0.03)
+    auto = dict(bench="autotune", headline_target=0.05,
+                rows=[dict(name="tuned-0.05", gops_w=12.9, cert=0.03),
+                      dict(name="tuned-0.1", gops_w=13.4, cert=0.05)])
+    hm = bd.headline_metrics(auto)
+    assert hm["target"] == 0.05 and hm["gops_w"] == 12.9
+    hm = bd.headline_metrics(GATEWAY_TRACED)
+    assert hm["target"] == "gateway_burst@v1"
+    assert hm["interactive_p99_ms"] == 10.0
+
+
+def _write_benches(tmp_path, gops_w):
+    p = tmp_path / "BENCH_gateway.json"
+    payload = copy.deepcopy(GATEWAY_TRACED)
+    payload["rows"][0]["gops_w"] = gops_w
+    p.write_text(json.dumps(payload))
+    return [str(p)]
+
+
+def test_ledger_appends_replaces_and_trend_checks(tmp_path, monkeypatch):
+    ledger = str(tmp_path / "LEDGER.jsonl")
+    files = _write_benches(tmp_path, 2.0)
+    entries = bd.update_ledger(ledger, files, gops_w_tol=0.05)
+    assert [e["status"] for e in entries] == ["note"]  # first datapoint
+    assert len(bd.load_ledger(ledger)) == 1
+    # idempotent on the same revision: replaced, not duplicated
+    bd.update_ledger(ledger, files, gops_w_tol=0.05)
+    assert len(bd.load_ledger(ledger)) == 1
+    # a different revision with a big drop: trend regression
+    monkeypatch.setattr(bd, "_git", lambda *a: "deadbeef\n")
+    entries = bd.update_ledger(
+        _write_benches(tmp_path, 1.0) and ledger,
+        _write_benches(tmp_path, 1.0), gops_w_tol=0.05,
+    )
+    assert [e["status"] for e in entries] == ["regression"]
+    assert len(bd.load_ledger(ledger)) == 2
+    # a trace/target change on yet another revision: skipped, not failed
+    monkeypatch.setattr(bd, "_git", lambda *a: "cafebabe\n")
+    files = _write_benches(tmp_path, 0.5)
+    payload = json.loads(pathlib.Path(files[0]).read_text())
+    payload["trace"]["version"] = 2
+    pathlib.Path(files[0]).write_text(json.dumps(payload))
+    entries = bd.update_ledger(ledger, files, gops_w_tol=0.05)
+    assert [e["status"] for e in entries] == ["skipped"]
+
+
 @pytest.mark.parametrize("against", ["HEAD"])
 def test_cli_runs_clean_against_self(tmp_path, against):
     """End to end through git: the committed baselines diffed against the

@@ -75,6 +75,58 @@ def test_schedule_cycles_consistency(layers):
     assert row.gops_per_w == pytest.approx(2 * 14.9403, abs=1e-2)
 
 
+def test_lm_pricing_golden():
+    """LM decode-step pricing, locked.
+
+    Comment trail (PR 5): the original itemization (4 d_model->d_model
+    projections + 2 FFN matmuls, no attention products) is kept as the
+    default so every pre-PR5 golden below is *unchanged*; the sharper
+    estimate adds GQA-correct projection widths, the attention score/value
+    products against a ``context``-token cache, and optional MoE routing.
+    The gateway's LM adapter now prices with the sharper form (context =
+    max_seq, a conservative upper bound), so its admission estimates grew
+    accordingly — BENCH_gateway.json was regenerated in the same PR.
+    """
+    d_model, d_ff = 128, 256
+    # default itemization: unchanged from the PR 4 golden
+    base = cm.lm_step_cycles(d_model, d_ff, 2)
+    specs = cm.lm_block_layers(d_model, d_ff)
+    assert len(specs) == 6
+    assert base == 2 * sum(
+        s.cycles(tile_cycles=cm.pipelined_tile_cycles()) for s in specs
+    )
+    # GQA widths: minitron-smoke-like 4 heads x 32, 2 kv heads
+    gqa = cm.lm_block_layers(d_model, d_ff, n_heads=4, head_dim=32,
+                             n_kv_heads=2)
+    assert [s.cout for s in gqa[:4]] == [128, 64, 64, 128]
+    # attention products appear with context > 0 and price as T*d_model
+    # MACs each (score: hd-contraction x n_heads*T outputs; value:
+    # T-contraction x n_heads*hd outputs)
+    attn = cm.lm_block_layers(d_model, d_ff, n_heads=4, head_dim=32,
+                              n_kv_heads=2, context=16)
+    assert len(attn) == 8
+    score, value = attn[4], attn[5]
+    assert (score.cin, score.cout) == (32, 4 * 16)
+    assert (value.cin, value.cout) == (16, 4 * 32)
+    assert score.macs() == value.macs() == 16 * d_model
+    # MoE routing: router matmul + top_k FFN passes instead of one
+    moe = cm.lm_block_layers(d_model, d_ff, n_experts=8, top_k=2)
+    assert len(moe) == 4 + 1 + 2 * 2
+    assert (moe[4].cin, moe[4].cout) == (d_model, 8)
+    # sharper pricing strictly exceeds the old estimate at equal geometry
+    sharp = cm.lm_step_cycles(d_model, d_ff, 2, n_heads=4, head_dim=32,
+                              n_kv_heads=2, context=16)
+    assert sharp > 0
+    ops_sharp = cm.lm_step_ops(d_model, d_ff, 2, n_heads=4, head_dim=32,
+                               n_kv_heads=2, context=16)
+    assert ops_sharp > cm.lm_step_ops(d_model, d_ff, 2, n_heads=4,
+                                      head_dim=32, n_kv_heads=2)
+    # cycles scale with the schedule exactly as the conv pricing does
+    assert cm.lm_step_cycles(d_model, d_ff, 2, [4, 4], n_heads=4,
+                             head_dim=32, n_kv_heads=2, context=16) \
+        == sharp // 2
+
+
 def test_schedule_as_printed_mode(layers):
     """mode='as_printed' shrinks p_out with the digit count but keeps the
     fixed delays, so savings are sublinear — unlike pipelined mode."""

@@ -22,16 +22,24 @@ class FakeAdapter:
     """A pure cycle-accounting engine: each request is ``cost`` modeled
     cycles of divisible work, served oldest-admitted-first in ``unit``-cycle
     micro-steps — the gateway protocol with the model taken out, so policy
-    properties sweep traffic shapes at zero compute."""
+    properties sweep traffic shapes at zero compute.
 
-    def __init__(self, kind, *, slots=2, unit=1_000):
+    ``preemptive=True`` (default): a micro-step that would exceed the
+    offered budget is not started (unless ``force``), matching the real
+    adapters' chunked path.  ``preemptive=False`` reproduces the PR 4
+    atomic loop (runs while ``consumed < budget``, overshooting by up to
+    ``unit - 1``)."""
+
+    def __init__(self, kind, *, slots=2, unit=1_000, preemptive=True):
         self.kind = kind
         self.slots = slots
         self.unit = unit
+        self.preemptive = preemptive
         self._inflight = {}
         self._remaining = {}
         self.total_ops = 0
         self.fallback_reason = None
+        self.work_calls = []  # (budget, consumed, forced) audit trail
 
     def prepare(self, payload, *, rid):
         return int(payload)  # payload is the request's cycle cost
@@ -52,21 +60,41 @@ class FakeAdapter:
         self._remaining[greq.rid] = greq.payload
         return 0
 
-    def has_work(self):
-        return bool(self._remaining)
+    def has_work(self, qos=None):
+        return any(
+            qos is None or self._inflight[rid].qos == qos
+            for rid in self._remaining
+        )
 
-    def work(self, budget):
+    def work(self, budget, qos=None, force=False, soft_limit=None):
         consumed = 0
         completed = []
-        while consumed < budget and self._remaining:
-            rid = next(iter(self._remaining))
+        forced = False
+        while True:
+            rids = [
+                rid for rid in self._remaining
+                if qos is None or self._inflight[rid].qos == qos
+            ]
+            if not rids:
+                break
+            rid = rids[0]
             chunk = min(self.unit, self._remaining[rid])
+            if self.preemptive:
+                at_soft = soft_limit is not None and consumed >= soft_limit
+                if consumed + chunk > budget or at_soft:
+                    if not (force and consumed == 0):
+                        break
+                    forced = True
+            elif consumed >= budget:
+                break
+            force = False
             self._remaining[rid] -= chunk
             consumed += chunk
             self.total_ops += chunk  # 1 op/cycle: GOPS plumbing stays live
             if self._remaining[rid] == 0:
                 del self._remaining[rid]
                 completed.append(self._inflight.pop(rid))
+        self.work_calls.append((budget, consumed, forced))
         return consumed, completed, []
 
 
@@ -92,12 +120,14 @@ def test_policy_validation():
             [FakeAdapter("a"), FakeAdapter("b")],
             shares={"a": 0.9, "b": 0.9},
         )
-    with pytest.raises(ValueError):
-        Gateway([FakeAdapter("a")], shares={"zzz": 1.0})
-    with pytest.raises(ValueError, match="missing"):
-        # a silently share-less class would be starvable: explicit shares
-        # must cover every served kind
-        Gateway([FakeAdapter("a"), FakeAdapter("b")], shares={"a": 1.0})
+    # a silently share-less class would be starvable: submission rejects
+    # any scheduling class (kind default or QoS label) not declared in
+    # shares — loudly, at the front door
+    gw = Gateway([FakeAdapter("a"), FakeAdapter("b")], shares={"a": 1.0})
+    with pytest.raises(ValueError, match="undeclared"):
+        gw.submit("b", 100)  # kind 'b' unlabeled -> class 'b': undeclared
+    with pytest.raises(ValueError, match="undeclared"):
+        gw.submit("a", 100, qos="gold")
     gw = Gateway([FakeAdapter("a")], policy="fair_share")  # alias
     assert gw.policy == "fair"
     with pytest.raises(ValueError):
@@ -188,26 +218,30 @@ def test_stats_account_latency_and_ops():
 def test_fair_share_never_starves_a_class(costs_a, costs_b, budget):
     """The no-starvation property: under cycle-budget fair-share every
     admitted request completes within a bounded number of rounds — each
-    backlogged class receives at least ``share * round_budget`` cycles of
-    service per round, so the bound is the class's own work divided by its
-    share (plus one admission round per request for slot waits).  Starved
-    traffic would blow through the bound and fail the drain guard."""
+    backlogged class receives at least its quantum (or, when the quantum
+    cannot yet afford a micro-step, work-conserving slack keeps the round
+    from idling), so every round with pending admitted work serves at
+    least one ``unit`` micro-step.  Starved traffic would blow through the
+    bound and fail the drain guard."""
+    unit = 500
     gw = Gateway(
-        [FakeAdapter("a", slots=2, unit=500),
-         FakeAdapter("b", slots=2, unit=500)],
+        [FakeAdapter("a", slots=2, unit=unit),
+         FakeAdapter("b", slots=2, unit=unit)],
         policy="fair", round_budget=budget,
     )
     for c in costs_a:
         gw.submit("a", c)
     for c in costs_b:
         gw.submit("b", c)
-    share = 0.5
+    # every round serves >= one unit chunk (round_budget >= unit), plus one
+    # admission round of slack per request for slot waits
     bound = 2 + len(costs_a) + len(costs_b) + sum(
-        -(-c // int(share * budget)) for c in costs_a + costs_b
+        -(-c // unit) for c in costs_a + costs_b
     )
     gw.drain(max_rounds=bound)  # raises (fails the property) if exceeded
     assert all(g.done for g in gw.requests)
     assert not gw.pending()
+    assert gw.stats()["forced"] == 0  # no step ever outsized a round
 
 
 # ----------------------------------------------- plan invalidation (real)

@@ -1,0 +1,543 @@
+"""Workload subsystem: seeded counter-PRNG arrival processes, the
+versioned trace schema, open-loop replay through the gateway's mid-round
+admission path, preemptive chunked execution properties (no quantum
+overdraft, work totals identical to the atomic path), QoS classes
+decoupled from engine kind, and plan hot-reload at a round boundary."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from test_gateway import FakeAdapter
+
+from repro.serve.gateway import Gateway, StalePlanError
+from repro.workload import Trace, TraceRequest, arrivals, from_streams
+from repro.workload import replay as replay_mod
+
+
+# ------------------------------------------------------------- arrivals
+
+
+def test_deterministic_process():
+    assert arrivals.deterministic(3, interval=100, start=50) == [50, 150, 250]
+    with pytest.raises(ValueError):
+        arrivals.deterministic(3, interval=0)
+
+
+def test_poisson_is_pure_monotone_and_prefix_stable():
+    a = arrivals.poisson(50, mean_interval=1_000, seed=7)
+    assert a == arrivals.poisson(50, mean_interval=1_000, seed=7)
+    assert a == sorted(a) and len(a) == 50
+    # arrival i is a pure function of (seed, i): extending n never
+    # reshuffles the prefix
+    assert arrivals.poisson(10, mean_interval=1_000, seed=7) == a[:10]
+    # a different seed decorrelates
+    assert a != arrivals.poisson(50, mean_interval=1_000, seed=8)
+
+
+def test_poisson_mean_interval_calibrated():
+    a = arrivals.poisson(4_000, mean_interval=500, seed=1)
+    gaps = np.diff([0] + a)
+    assert abs(gaps.mean() - 500) / 500 < 0.1
+
+
+def test_on_off_pure_monotone_and_prefix_stable():
+    kw = dict(seed=3, burst_interval=100, on_mean=500, off_mean=2_000)
+    b = arrivals.on_off(40, **kw)
+    assert b == arrivals.on_off(40, **kw)
+    assert b == sorted(b) and len(b) == 40
+    assert arrivals.on_off(12, **kw) == b[:12]
+    # bursty: the gap distribution is bimodal — some gaps far exceed the
+    # in-burst interval (OFF dwells), most sit near it
+    gaps = np.diff(b)
+    assert gaps.max() > 5 * 100
+    assert np.median(gaps) < 3 * 100
+
+
+def test_counter_uniform_pure_and_in_range():
+    us = [arrivals.counter_uniform(5, i) for i in range(1_000)]
+    assert all(0.0 <= u < 1.0 for u in us)
+    assert len(set(us)) == len(us)  # no collisions at this scale
+    assert arrivals.counter_uniform(5, 17) == arrivals.counter_uniform(5, 17)
+    assert arrivals.counter_uniform(5, 17) != arrivals.counter_uniform(6, 17)
+
+
+def test_generate_dispatch():
+    assert arrivals.generate("deterministic", 2, interval=10) == [0, 10]
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        arrivals.generate("lognormal", 2)
+
+
+# ----------------------------------------------------------------- trace
+
+
+def _mini_trace(seed=5):
+    return from_streams(
+        "mini", seed,
+        [
+            dict(kind="a", qos="gold", arrivals=[100, 2_300],
+                 payload=dict(cost=1_000)),
+            dict(kind="a", qos="a", arrivals=[700],
+                 payload=dict(cost=2_000), deadline_cycles=50_000),
+        ],
+    )
+
+
+def test_trace_round_trip_and_props(tmp_path):
+    tr = _mini_trace()
+    assert len(tr) == 3
+    assert tr.qos_classes == ["gold", "a"]  # first-arrival order
+    assert tr.kinds == ["a"]
+    assert tr.span_cycles == 2_300
+    # requests sorted by arrival regardless of builder order
+    assert [r.arrival_cycle for r in tr.requests] == [100, 700, 2_300]
+    path = tmp_path / "mini.json"
+    tr.save(path)
+    tr2 = Trace.load(path)
+    assert tr2 == tr
+    assert tr2.requests[1].deadline_cycles == 50_000
+
+
+def test_trace_version_guard(tmp_path):
+    tr = _mini_trace()
+    d = tr.to_json()
+    d["version"] = d["version"] + 1
+    with pytest.raises(ValueError, match="newer than this code"):
+        Trace.from_json(d)
+    d["version"] = 1
+    d["schema"] = "something.else"
+    with pytest.raises(ValueError, match="not a workload trace"):
+        Trace.from_json(d)
+
+
+def test_payload_spec_validation():
+    with pytest.raises(ValueError, match="missing"):
+        TraceRequest(kind="lm", qos="lm", arrival_cycle=0,
+                     payload=dict(prompt_len=4))
+    with pytest.raises(ValueError, match="< 1"):
+        TraceRequest(kind="seg", qos="seg", arrival_cycle=0,
+                     payload=dict(h=0, w=32))
+    with pytest.raises(ValueError, match="arrival_cycle"):
+        TraceRequest(kind="a", qos="a", arrival_cycle=-1, payload={})
+    # non-engine kinds pass through unvalidated (synthetic adapters)
+    TraceRequest(kind="a", qos="a", arrival_cycle=0, payload=dict(cost=1))
+
+
+def test_from_streams_callable_payload():
+    tr = from_streams(
+        "fn", 0,
+        [dict(kind="a", arrivals=[10, 20],
+              payload=lambda i: dict(cost=100 * (i + 1)))],
+    )
+    assert [r.payload["cost"] for r in tr.requests] == [100, 200]
+    assert tr.requests[0].qos == "a"  # qos defaults to kind
+
+
+def test_canonical_trace_committed_and_regenerable():
+    """The committed canonical trace is exactly what its builder builds
+    (idempotent generation — a silently edited trace would poison the
+    bench tracker's cross-revision keying)."""
+    import importlib.util
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "make_traces", root / "scripts" / "make_traces.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    committed = Trace.load(root / "traces" / "gateway_burst.json")
+    assert committed == mod.gateway_burst()
+    assert set(committed.qos_classes) == {"interactive", "batch", "seg"}
+    assert set(committed.meta["shares"]) == set(committed.qos_classes)
+
+
+# ------------------------------------------------------- open-loop replay
+
+
+def _cost_mat(treq, seed, idx):
+    return treq.payload["cost"], {}
+
+
+def _fake_gateway(policy="fair", **kw):
+    kw.setdefault("round_budget", 1_000)
+    kw.setdefault("shares", {"a": 0.5, "gold": 0.5})
+    return Gateway([FakeAdapter("a", slots=4, unit=200)], policy=policy, **kw)
+
+
+def test_replay_stamps_arrivals_and_admits_midround():
+    gw = _fake_gateway()
+    out = replay_mod.replay(gw, _mini_trace(), {"a": _cost_mat})
+    assert all(g.done for g in gw.requests)
+    # arrival stamped at the trace cycle, not the round boundary
+    gold = [g for g in gw.requests if g.qos == "gold"]
+    assert [g.arrival for g in gold] == [100, 2_300]
+    assert gold[0].admitted_round == 0  # injected inside round 0
+    # causality: nothing finishes before it arrives
+    assert all(g.finished >= g.arrival for g in gw.requests)
+    assert out["per_class"]["gold"]["completed"] == 2
+    assert out["trace"]["name"] == "mini"
+    assert out["rows"]
+
+
+def test_replay_rejects_undeclared_class_and_missing_kind():
+    gw = Gateway([FakeAdapter("a")], round_budget=1_000,
+                 shares={"a": 1.0})
+    with pytest.raises(ValueError, match="QoS classes"):
+        replay_mod.replay(gw, _mini_trace(), {"a": _cost_mat})
+    tr = from_streams("k", 0, [dict(kind="zzz", arrivals=[0],
+                                    payload=dict(cost=1))])
+    gw = _fake_gateway()
+    with pytest.raises(ValueError, match="adapters for kinds"):
+        replay_mod.replay(gw, tr, {"a": _cost_mat})
+
+
+def test_replay_deterministic_per_class_percentiles():
+    """The satellite determinism contract: the same seed + trace replays
+    to *identical* per-class p50/p99 — modeled time has no noise."""
+    tr = from_streams(
+        "det", 11,
+        [
+            dict(kind="a", qos="gold",
+                 arrivals=arrivals.poisson(15, mean_interval=700, seed=11),
+                 payload=lambda i: dict(cost=300 + 100 * (i % 4))),
+            dict(kind="a", qos="a",
+                 arrivals=arrivals.on_off(10, seed=12, burst_interval=150,
+                                          on_mean=800, off_mean=2_500),
+                 payload=dict(cost=1_500)),
+        ],
+    )
+
+    def once():
+        gw = _fake_gateway()
+        return replay_mod.replay(gw, tr, {"a": _cost_mat})
+
+    a, b = once(), once()
+    for qos in ("gold", "a"):
+        assert a["per_class"][qos]["p50_ms"] == b["per_class"][qos]["p50_ms"]
+        assert a["per_class"][qos]["p99_ms"] == b["per_class"][qos]["p99_ms"]
+    assert a["clock_cycles"] == b["clock_cycles"]
+
+
+def test_step_round_rejects_out_of_window_arrivals():
+    """A future-stamped arrival admitted early could finish before it
+    'arrived'; the round rejects anything stamped at/past its end."""
+    gw = _fake_gateway()
+    with pytest.raises(ValueError, match="outside this round"):
+        gw.step_round(arrivals=[(gw.clock + gw.round_budget, "a", 100, {})])
+
+
+def test_outsized_step_forces_progress_even_while_others_busy():
+    """Per-class liveness: a class whose only micro-step exceeds the whole
+    round budget must not starve behind a busy neighbor — after the stall
+    limit it gets one forced (overdrafting) step, and everything drains."""
+    big = FakeAdapter("big", slots=1, unit=5_000)  # indivisible 5k step
+    small = FakeAdapter("small", slots=2, unit=200)
+    gw = Gateway([big, small], policy="fair", round_budget=1_000)
+    r_big = gw.submit("big", 5_000)
+    smalls = [gw.submit("small", 2_000) for _ in range(6)]
+    gw.drain(max_rounds=60)
+    assert r_big.done and all(s.done for s in smalls)
+    assert gw.stats()["forced"] >= 1  # the escape fired, and was counted
+
+
+def test_advance_to_runs_idle_rounds():
+    gw = _fake_gateway()
+    gw.advance_to(3_500)
+    assert gw.clock >= 3_500
+    assert gw.rounds == 4
+
+
+# ----------------------------------------- preemption properties (fair)
+
+
+@given(
+    st.lists(st.integers(100, 4_000), min_size=1, max_size=10),
+    st.lists(st.integers(100, 4_000), min_size=1, max_size=10),
+    st.integers(600, 4_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_chunked_execution_never_overdrafts_a_class_quantum(
+    costs_a, costs_b, budget,
+):
+    """The acceptance property: under preemptive chunked execution no
+    work() call consumes more than the budget it was offered (unless the
+    liveness escape forced it — which must not fire when every micro-step
+    fits a round), and class quanta never go negative."""
+    a = FakeAdapter("a", slots=3, unit=500)
+    b = FakeAdapter("b", slots=3, unit=500)
+    gw = Gateway([a, b], policy="fair", round_budget=budget)
+    for c in costs_a:
+        gw.submit("a", c)
+    for c in costs_b:
+        gw.submit("b", c)
+    bound = 4 + len(costs_a) + len(costs_b) + sum(
+        -(-c // 500) for c in costs_a + costs_b
+    )
+    while gw.pending():
+        assert gw.rounds < bound
+        gw.step_round()
+        # the quantum is never driven negative by chunked execution
+        assert all(d >= 0 for d in gw._deficit.values())
+    assert gw.stats()["forced"] == 0  # unit 500 <= round_budget always
+    for adapter in (a, b):
+        for budget_offered, consumed, forced in adapter.work_calls:
+            assert forced is False
+            assert consumed <= budget_offered
+
+
+@given(
+    st.lists(st.integers(100, 4_000), min_size=1, max_size=8),
+    st.integers(600, 3_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_total_emitted_work_identical_to_atomic_path(costs, budget):
+    """Chunked execution changes *when* cycles are charged, never how many:
+    total ops, completions and per-request service are identical to the
+    atomic path on the same trace."""
+    tr = from_streams(
+        "w", 0,
+        [dict(kind="a", arrivals=[i * 137 for i in range(len(costs))],
+              payload=lambda i: dict(cost=costs[i]))],
+    )
+
+    def once(preemptive):
+        ad = FakeAdapter("a", slots=4, unit=500, preemptive=preemptive)
+        gw = Gateway([ad], policy="fair", round_budget=budget,
+                     shares={"a": 1.0})
+        replay_mod.replay(gw, tr, {"a": _cost_mat})
+        return ad, gw
+
+    ad_p, gw_p = once(True)
+    ad_a, gw_a = once(False)
+    assert ad_p.total_ops == ad_a.total_ops == sum(costs)
+    assert sum(g.done for g in gw_p.requests) == len(costs)
+    assert sum(g.done for g in gw_a.requests) == len(costs)
+
+
+# ------------------------------------------------- QoS class decoupling
+
+
+def test_qos_classes_decoupled_from_kind_protect_interactive():
+    """Two QoS classes behind ONE adapter kind: a backlogged bulk class
+    must not starve the interactive class's quantum — the fair share is
+    keyed by class, not by engine."""
+    ad = FakeAdapter("a", slots=8, unit=200)
+    gw = Gateway([ad], policy="fair", round_budget=1_000,
+                 shares={"gold": 0.5, "bulk": 0.5})
+    bulk = [gw.submit("a", 4_000, qos="bulk") for _ in range(4)]
+    gold = [gw.submit("a", 400, qos="gold") for _ in range(3)]
+    gw.drain()
+    st_ = gw.stats()
+    assert st_["per_class"]["gold"]["completed"] == 3
+    assert st_["per_class"]["bulk"]["completed"] == 4
+    # every gold request finished rounds before the bulk backlog drained:
+    # its 500-cycle/round quantum served it despite 16k cycles of bulk
+    assert max(g.finished_round for g in gold) \
+        < max(b.finished_round for b in bulk)
+    # ... and gold latency is bounded by its own work / share, not by the
+    # bulk backlog (which alone needs 16 rounds of full budget)
+    assert all(g.latency_cycles <= 3 * 1_000 for g in gold)
+
+
+# ------------------------------------------------------- plan hot-reload
+
+
+class SwappablePlan:
+    def __init__(self, tag, params_fp):
+        self.tag = tag
+        self.params_fingerprint = params_fp
+        self.fingerprint = f"plan-{tag}"
+
+
+class SwappableAdapter(FakeAdapter):
+    """FakeAdapter + the plan surface: verify/install like the real ones."""
+
+    def __init__(self, kind, **kw):
+        super().__init__(kind, **kw)
+        self.params = {"w": np.arange(4, dtype=np.float32)}
+        self.plan = None
+        self.installed = []
+
+    def install_plan(self, plan):
+        if self.has_work():
+            raise RuntimeError("install_plan with requests in flight")
+        self.plan = plan
+        self.installed.append(plan.tag)
+
+
+def _fp(adapter):
+    from repro.autotune.calibrate import params_fingerprint
+
+    return params_fingerprint(adapter.params)
+
+
+def test_swap_plan_rejects_stale_fingerprint_immediately():
+    ad = SwappableAdapter("a")
+    gw = Gateway([ad], round_budget=1_000)
+    with pytest.raises(StalePlanError) as exc:
+        gw.swap_plan("a", SwappablePlan("v2", "0" * 64))
+    assert "0" * 64 in str(exc.value)
+    assert _fp(ad) in str(exc.value)
+    assert not gw._pending_swap  # nothing queued
+
+
+def test_swap_plan_installs_at_round_boundary_against_midstream_traffic():
+    """The hot-reload property: a swap requested mid-stream (in-flight +
+    queued requests) holds admission for its kind, lets in-flight work
+    drain under the old plan, installs at a round boundary, then serves
+    later requests under the new plan.  Every request completes."""
+    ad = SwappableAdapter("a", slots=2, unit=500)
+    gw = Gateway([ad], policy="fair", round_budget=1_000)
+    early = [gw.submit("a", 3_000) for _ in range(3)]  # 2 admit, 1 queued
+    gw.step_round()
+    assert any(g.admitted is not None and not g.done for g in early)
+    plan = SwappablePlan("v2", _fp(ad))
+    gw.swap_plan("a", plan)
+    assert gw._pending_swap  # busy: deferred, not installed
+    late = [gw.submit("a", 800) for _ in range(2)]
+    gw.drain()
+    assert ad.installed == ["v2"] and ad.plan is plan
+    assert all(g.done for g in early + late)
+    [swap] = gw.plan_swaps
+    assert swap["kind"] == "a" and swap["fingerprint"] == "plan-v2"
+    # admission was held: nothing admitted into the old plan after the
+    # swap request; later requests were admitted at/after the install
+    assert all(g.admitted_round >= swap["round"] for g in late)
+    assert gw.stats()["plan_swaps"] == gw.plan_swaps
+
+
+@given(st.lists(st.integers(200, 3_000), min_size=1, max_size=6),
+       st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_swap_plan_midstream_property(costs, swap_at):
+    """Property sweep: whatever the traffic shape and swap timing, the
+    swap installs exactly once, at a boundary where the adapter is idle,
+    and every request (before and after) completes."""
+    ad = SwappableAdapter("a", slots=2, unit=400)
+    gw = Gateway([ad], policy="fair", round_budget=900)
+    for c in costs:
+        gw.submit("a", c)
+    for _ in range(swap_at):
+        if gw.pending():
+            gw.step_round()
+    gw.swap_plan("a", SwappablePlan("v2", _fp(ad)))
+    post = gw.submit("a", 600)
+    gw.drain(max_rounds=200)
+    assert ad.installed == ["v2"]
+    assert all(g.done for g in gw.requests)
+    assert post.done
+
+
+def test_swap_plan_on_real_seg_adapter():
+    """End to end with the real engine: hot-swap a fresh tuned plan onto
+    an idle SegAdapter; the engine rebuilds onto the plan's schedule and
+    serves the next request under it."""
+    from test_gateway import _plan_for, _small_unet
+
+    from repro.serve.gateway import SegAdapter
+
+    cfg, params = _small_unet()
+    adapter = SegAdapter(cfg, params, batch=2)
+    gw = Gateway([adapter], policy="fair", round_budget=50_000_000)
+    r0 = gw.submit("seg", np.ones((32, 32, 2), np.float32))
+    gw.drain()
+    assert r0.done and adapter.plan is None
+    plan = _plan_for(params, stale=False)
+    gw.swap_plan("seg", plan)
+    assert adapter.plan is plan  # idle: installed immediately
+    assert adapter.engine.base_schedule.planes == tuple(plan.planes)
+    r1 = gw.submit("seg", np.ones((32, 32, 2), np.float32))
+    gw.drain()
+    assert r1.done and r1.handle.result is not None
+    with pytest.raises(StalePlanError):
+        gw.swap_plan("seg", _plan_for(params, stale=True))
+
+
+# --------------------------------- chunked prefill, slot-isolated engine
+
+
+def test_engine_chunked_prefill_work_equivalent_to_atomic():
+    """Chunked prefill (admit_slot + metered prefill + ready-gated decode)
+    emits exactly the atomic path's *work*: same prompts prefilled to
+    completion, same number of decode steps per request, completions
+    intact, with decode never running a mid-prefill slot.  Token values
+    are deliberately not compared: XLA CPU float matmuls jitter in the
+    last ulp run-to-run regardless of scheduling (greedy argmax over
+    random-init logits amplifies ties into different tokens even between
+    two *atomic* runs), so value identity measures the backend, not the
+    engine — the gateway bench gates value-level bit-identity on the
+    integer seg datapath instead, where accumulation is associative."""
+    import jax
+
+    from repro import models
+    from repro.configs import get_smoke_config
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_smoke_config("minitron_4b")
+    params = models.build(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n) for n in (5, 3)]
+
+    eng = Engine(cfg, params, batch=2, max_seq=24)
+    r0 = Request(rid=0, prompt=prompts[0], max_new=4)
+    r1 = Request(rid=1, prompt=prompts[1], max_new=4)
+    assert eng.admit_slot(r0) and eng.admit_slot(r1)
+    assert r0.prefill_remaining == 5 and not r0.ready
+    assert eng.prefill(r0, 2) == 2
+    assert r0.prefill_pos == 2 and not r0.ready
+    assert eng.prefill(r1) == 3 and r1.ready
+    # decode skips the mid-prefill slot: only r1 steps
+    assert eng.ready_slots() == [(1, r1)]
+    assert eng.step() == []  # r1 not done yet, nothing completes
+    assert len(r1.out) == 1 and len(r0.out) == 0  # r0 untouched
+    assert eng.prefill(r0) == 3 and r0.ready  # catch up
+    done = []
+    while len(done) < 2:
+        done.extend(eng.step())
+    assert {r.rid for r in done} == {0, 1}
+    assert [len(r.out) for r in (r0, r1)] == [4, 4]
+    assert r0.prefill_remaining == 0
+    # the atomic surface emits the same work shape
+    eng2 = Engine(cfg, params, batch=2, max_seq=24)
+    done2 = eng2.run([Request(rid=i, prompt=p, max_new=4)
+                      for i, p in enumerate(prompts)])
+    assert [len(r.out) for r in sorted(done2, key=lambda r: r.rid)] == [4, 4]
+
+
+def test_seg_group_scoped_stepping_bit_identical():
+    """The value-level half of the preemption bit-identity claim, on the
+    datapath where it is provable: QoS-group-scoped micro-batch stepping
+    (what the gateway's class quanta drive) stitches logits bit-identical
+    to plain global stepping — the MSDF int8 datapath's integer
+    accumulation is associative and the tuned plan's per-tile activation
+    scales make numerics batch-composition independent."""
+    from test_gateway import _plan_for, _small_unet
+
+    from repro.segserve.engine import SegEngine
+
+    cfg, params = _small_unet()
+    plan = _plan_for(params, stale=False)
+    imgs = [
+        np.linspace(0, 1, 32 * 32 * 2, dtype=np.float32).reshape(32, 32, 2),
+        np.linspace(1, -1, 32 * 32 * 2, dtype=np.float32).reshape(32, 32, 2),
+    ]
+
+    def serve(grouped: bool):
+        eng = SegEngine(cfg, params, plan=plan, batch=2)
+        reqs = [
+            eng.submit(im, group=(f"g{i}" if grouped else None))
+            for i, im in enumerate(imgs)
+        ]
+        eng.queue.pump(eng.slots, eng._admit)
+        if grouped:
+            # interleave group-scoped steps the way class quanta would
+            while eng.has_work():
+                for g in ("g1", "g0"):
+                    eng.step(group=g)
+        else:
+            while eng.has_work():
+                eng.step()
+        assert all(r.done for r in reqs)
+        return [r.result.logits for r in reqs]
+
+    for a, b in zip(serve(True), serve(False)):
+        assert np.array_equal(a, b)
