@@ -1,0 +1,269 @@
+"""Sharded-fabric scale-out benchmark — ``BENCH_fabric.json``.
+
+Replays the scaled canonical traces (``traces/gateway_burst_x10.json`` /
+``_x100.json`` — same traffic shape as ``gateway_burst``, 10x/100x the
+arrival rate over the same span) through a single modeled gateway and
+through an N-shard :class:`repro.serve.Fabric`, open-loop via
+``repro.workload.replay`` — the identical harness that drives the
+single-gateway bench, routing at arrival injection.
+
+All engines here are *modeled* (:mod:`repro.serve.modeled`): work is
+priced with the same relation-(2) cycle model the real adapters use but
+never executed, so a 100x trace across 16 shards replays in CI seconds
+while everything under test — routing, stealing, per-class latency,
+fleet-ledger arithmetic — is exercised for real.  The x1 trace already
+offers ~1.4 chips of work, so the x10 point is deep saturation for one
+gateway and ~0.9 utilization for 16 shards.
+
+Gates (each raises, so CI fails loudly):
+
+1. **Single-gateway saturation** — on the x10 trace the single gateway's
+   minority-class (seg) p99 must grow *superlinearly* in the load factor
+   (> 10x its x1 p99): the backlog dominates service time, which is what
+   "one gateway is one chip" means.
+2. **Fabric sub-linear scaling** — the 16-shard fabric's seg p99 on the
+   same x10 trace must grow *sub-linearly* (< 10x the fabric's own x1
+   p99): added load is absorbed by added shards, not queueing.
+3. **Exact ledger additivity** — on every fabric run, the fleet ledger's
+   incrementally-accumulated ops/cycles must equal the direct per-shard
+   sums to the integer (``FleetLedger.additivity()['holds']``), per-class
+   included — MINT's compounding-error lesson, gated.
+4. **Completion conservation** — every run completes every request in
+   its trace; nothing is dropped by routing or stealing.
+
+Router comparison rows (``class`` / ``p2c`` / ``deficit``) are recorded
+at x10; the headline fabric configuration is ``deficit`` routing with
+work stealing on.  ``scripts/bench_diff.py`` diffs fabric rows by
+(trace, config) and trend-checks fleet GOPS/W (power modeled as N chips).
+
+    PYTHONPATH=src python -m benchmarks.run --section fabric
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+_ROOT = (
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if "__file__" in globals() else "."
+)
+TRACES = {
+    "x1": os.path.join(_ROOT, "traces", "gateway_burst.json"),
+    "x10": os.path.join(_ROOT, "traces", "gateway_burst_x10.json"),
+    "x100": os.path.join(_ROOT, "traces", "gateway_burst_x100.json"),
+}
+
+ROUND_BUDGET = 800_000
+N_SHARDS = 16
+LM_BATCH = 20
+LM_MAX_SEQ = 96
+MINORITY = "seg"
+FABRIC_SEED = 7
+
+
+def _mk_gateway(shares, *, policy="fair"):
+    from repro.configs import get_smoke_config
+    from repro.serve.gateway import Gateway
+    from repro.serve.modeled import ModeledLMAdapter, ModeledSegAdapter
+
+    cfg = get_smoke_config("minitron_4b")
+    return Gateway(
+        [
+            ModeledLMAdapter.from_config(cfg, batch=LM_BATCH,
+                                         max_seq=LM_MAX_SEQ),
+            ModeledSegAdapter.from_geometry(),
+        ],
+        policy=policy,
+        round_budget=ROUND_BUDGET,
+        shares=shares,
+    )
+
+
+def _replay(target, trace):
+    from repro.serve.modeled import modeled_materializer
+    from repro.workload import replay as replay_mod
+
+    mats = {k: modeled_materializer() for k in trace.kinds}
+    t0 = time.perf_counter()
+    summary = replay_mod.replay(target, trace, mats, max_rounds=100_000)
+    summary["wall_us"] = (time.perf_counter() - t0) * 1e6
+    return summary
+
+
+def _run_one(trace, shares, *, n_shards, router=None):
+    """One replay: single gateway (``n_shards=1``, ``router=None``) or an
+    N-shard fabric.  Returns (summary, fabric-or-gateway)."""
+    from repro.serve.fabric import Fabric
+
+    if n_shards == 1 and router is None:
+        gw = _mk_gateway(shares)
+        return _replay(gw, trace), gw
+    fab = Fabric(
+        [_mk_gateway(shares) for _ in range(n_shards)],
+        router=router, seed=FABRIC_SEED,
+    )
+    return _replay(fab, trace), fab
+
+
+def _check_completion(summary, trace, label):
+    for qos, pc in summary["per_class"].items():
+        if pc["n"] != pc["completed"]:
+            raise RuntimeError(
+                f"{label} dropped work: class {qos} completed "
+                f"{pc['completed']}/{pc['n']} on {trace.name}"
+            )
+
+
+def _check_additivity(fab, label):
+    add = fab.additivity()
+    if not add["holds"]:
+        raise RuntimeError(
+            f"fleet ledger additivity violated on {label}: ledger "
+            f"ops/worked {add['ledger_total_ops']}/"
+            f"{add['ledger_total_worked']} vs direct "
+            f"{add['direct_total_ops']}/{add['direct_total_worked']}"
+        )
+    return add
+
+
+def run(*, json_path: str | None = "BENCH_fabric.json"):
+    from repro.workload import Trace
+
+    traces = {k: Trace.load(p) for k, p in TRACES.items()}
+    shares = dict(traces["x1"].meta["shares"])
+
+    summaries: dict[str, dict] = {}
+    payload_rows = []
+    rows: list[tuple[str, float, str]] = []
+
+    plan = [
+        # label, trace key, shards, router
+        ("single/x1", "x1", 1, None),
+        ("single/x10", "x10", 1, None),
+        (f"fabric{N_SHARDS}-deficit/x1", "x1", N_SHARDS, "deficit"),
+        (f"fabric{N_SHARDS}-deficit/x10", "x10", N_SHARDS, "deficit"),
+        (f"fabric{N_SHARDS}-class/x10", "x10", N_SHARDS, "class"),
+        (f"fabric{N_SHARDS}-p2c/x10", "x10", N_SHARDS, "p2c"),
+        # informational scale point: 16 shards at x100 is itself ~9x
+        # oversubscribed — the next capacity-planning datapoint
+        (f"fabric{N_SHARDS}-deficit/x100", "x100", N_SHARDS, "deficit"),
+    ]
+    for label, tkey, n_shards, router in plan:
+        trace = traces[tkey]
+        summary, target = _run_one(
+            trace, shares, n_shards=n_shards, router=router
+        )
+        _check_completion(summary, trace, label)
+        extra = dict(label=label, trace=tkey, n_shards=n_shards,
+                     router=router)
+        if n_shards > 1:
+            add = _check_additivity(target, label)
+            extra.update(
+                additivity_holds=add["holds"],
+                stolen=target.stolen,
+                dispatched=list(target.dispatched),
+            )
+        summaries[label] = summary
+        per_c = ";".join(
+            f"{q}_p99={pc['p99_ms']:.2f}"
+            for q, pc in summary["per_class"].items()
+            if pc["completed"]
+        )
+        rows.append(
+            (
+                f"fabric/{label}",
+                summary["clock_cycles"] / 100e6 * 1e6,  # modeled us
+                f"rounds={summary['rounds']};"
+                f"gops_w={summary['gops_w']:.3f};{per_c}",
+            )
+        )
+        payload_rows.append(
+            dict(
+                **extra,
+                rounds=summary["rounds"],
+                clock_cycles=summary["clock_cycles"],
+                time_ms=summary["time_ms"],
+                total_ops=summary["total_ops"],
+                gops=summary["gops"],
+                gops_w=summary["gops_w"],
+                forced=summary["forced"],
+                per_class=summary["per_class"],
+                # wall_us deliberately not persisted (machine noise)
+            )
+        )
+
+    def seg_p99(label):
+        return summaries[label]["per_class"][MINORITY]["p99_ms"]
+
+    # Gate 1: the single gateway saturates — superlinear p99 growth
+    single_ratio = seg_p99("single/x10") / seg_p99("single/x1")
+    if not single_ratio > 10.0:
+        raise RuntimeError(
+            f"single gateway did not saturate on the x10 trace: "
+            f"{MINORITY} p99 grew only {single_ratio:.1f}x (expected "
+            f"superlinear, > 10x) — the fabric bench's premise is gone"
+        )
+
+    # Gate 2: the fabric absorbs the same load sub-linearly
+    fab1 = f"fabric{N_SHARDS}-deficit/x1"
+    fab10 = f"fabric{N_SHARDS}-deficit/x10"
+    fabric_ratio = seg_p99(fab10) / seg_p99(fab1)
+    if not fabric_ratio < 10.0:
+        raise RuntimeError(
+            f"{N_SHARDS}-shard fabric scaled superlinearly on the x10 "
+            f"trace: {MINORITY} p99 grew {fabric_ratio:.1f}x (gate: "
+            f"< 10x, sub-linear in the load factor)"
+        )
+
+    if json_path:
+        payload = dict(
+            bench="fabric",
+            traces={
+                k: dict(name=t.name, version=t.version, seed=t.seed,
+                        n_requests=len(t), span_cycles=t.span_cycles)
+                for k, t in traces.items()
+            },
+            round_budget=ROUND_BUDGET,
+            n_shards=N_SHARDS,
+            shares=shares,
+            rows=payload_rows,
+            gate=dict(
+                holds=True,  # every sub-gate raised above otherwise
+                saturation=dict(
+                    minority=MINORITY,
+                    single_x1_p99_ms=seg_p99("single/x1"),
+                    single_x10_p99_ms=seg_p99("single/x10"),
+                    ratio=single_ratio,
+                    holds=bool(single_ratio > 10.0),
+                ),
+                sublinear=dict(
+                    minority=MINORITY,
+                    fabric_x1_p99_ms=seg_p99(fab1),
+                    fabric_x10_p99_ms=seg_p99(fab10),
+                    ratio=fabric_ratio,
+                    holds=bool(fabric_ratio < 10.0),
+                ),
+                additivity=dict(
+                    holds=True,  # raised above otherwise, every fabric run
+                    checked_runs=[
+                        r["label"] for r in payload_rows
+                        if r.get("additivity_holds")
+                    ],
+                ),
+            ),
+        )
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_fabric.json")
+    args = ap.parse_args()
+    for name, us, derived in run(json_path=args.json):
+        print(f"{name},{us:.1f},{derived}")

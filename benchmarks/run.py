@@ -1,15 +1,19 @@
 """Benchmark harness — one section per paper table/claim.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay]
+        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay|fabric]
 
-Prints ``name,us_per_call,derived`` CSV rows.  The segserve, autotune and
-gateway sections also write machine-readable ``BENCH_segserve.json`` /
-``BENCH_autotune.json`` / ``BENCH_gateway.json`` for the bench tracker
+Prints ``name,us_per_call,derived`` CSV rows.  The segserve, autotune,
+gateway and fabric sections also write machine-readable
+``BENCH_segserve.json`` / ``BENCH_autotune.json`` /
+``BENCH_gateway.json`` / ``BENCH_fabric.json`` for the bench tracker
 (``scripts/bench_diff.py`` diffs them across revisions).  ``replay`` is
 the open-loop trace-replay bench — an alias for the gateway section,
 which replays the committed canonical trace ``traces/gateway_burst.json``
-through ``repro.workload.replay``.
+through ``repro.workload.replay``.  ``fabric`` replays the scaled
+``gateway_burst_x10``/``_x100`` traces through a single modeled gateway
+and an N-shard sharded fabric (``repro.serve.Fabric``) and gates
+scale-out p99 behavior plus exact fleet-ledger additivity.
 """
 from __future__ import annotations
 
@@ -83,6 +87,10 @@ def main() -> None:
         from benchmarks import gateway
 
         rows += gateway.run()
+    if args.section in ("all", "fabric"):
+        from benchmarks import fabric
+
+        rows += fabric.run()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

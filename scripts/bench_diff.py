@@ -56,6 +56,7 @@ DEFAULT_FILES = (
     "BENCH_segserve.json",
     "BENCH_autotune.json",
     "BENCH_gateway.json",
+    "BENCH_fabric.json",
 )
 
 
@@ -112,6 +113,21 @@ def comparable_rows(payload: dict):
             if minority in pc and pc[minority].get("p99_ms") is not None:
                 metrics["minority_p99_ms"] = pc[minority]["p99_ms"]
             yield f"policy:{r['policy']}", target, metrics
+        return
+    if bench == "fabric":
+        # comparable only on the same trace set: key by every replayed
+        # trace's (name, schema version), so a trace regen or schema bump
+        # reads as a target change — skipped, never failed
+        trs = payload.get("traces", {})
+        target = ";".join(
+            f"{t['name']}@v{t['version']}" for _, t in sorted(trs.items())
+        ) or None
+        for r in payload.get("rows", []):
+            metrics = dict(gops_w=r.get("gops_w"))
+            pc = r.get("per_class", {})
+            if "seg" in pc and pc["seg"].get("p99_ms") is not None:
+                metrics["minority_p99_ms"] = pc["seg"]["p99_ms"]
+            yield f"run:{r['label']}", target, metrics
         return
     file_target = payload.get("target_rel_err")
     for r in payload.get("rows", []):
@@ -227,6 +243,24 @@ def headline_metrics(payload: dict) -> dict | None:
             pc = row.get("per_class", {})
             if "interactive" in pc:
                 out["interactive_p99_ms"] = pc["interactive"].get("p99_ms")
+            return out
+    if bench == "fabric":
+        trs = payload.get("traces", {})
+        target = ";".join(
+            f"{t['name']}@v{t['version']}" for _, t in sorted(trs.items())
+        ) or None
+        n = payload.get("n_shards")
+        row = next(
+            (r for r in rows
+             if r.get("router") == "deficit" and r.get("trace") == "x10"),
+            rows[0] if rows else None,
+        )
+        if row:
+            out = dict(target=target, gops_w=row.get("gops_w"), cert=None,
+                       n_shards=n)
+            pc = row.get("per_class", {})
+            if "seg" in pc:
+                out["seg_p99_ms"] = pc["seg"].get("p99_ms")
             return out
     best = max((r for r in rows if r.get("gops_w")),
                key=lambda r: r["gops_w"], default=None)

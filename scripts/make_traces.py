@@ -19,6 +19,15 @@ Canonical traces
     — the atomic-prefill overdraft shape), and a sparse deterministic
     minority of segmentation images.  Arrival stamps assume the bench's
     800k-cycle rounds (8 ms at the paper's 100 MHz).
+
+``gateway_burst_x10`` / ``gateway_burst_x100``
+    The same traffic shape at 10x / 100x the arrival *rate* over the
+    same span: per-stream counts scale up by the factor and the
+    inter-arrival / intra-burst intervals compress by it (the on-off
+    burst phase structure is preserved).  The x1 trace already offers
+    ~1.4 chips of modeled work; the scaled variants are the fabric
+    bench's saturation workloads — one gateway backlogs superlinearly,
+    an N-shard fabric keeps per-class p99 near baseline.
 """
 from __future__ import annotations
 
@@ -71,7 +80,61 @@ def gateway_burst(seed: int = 20260729):
     )
 
 
-BUILDERS = {"gateway_burst": gateway_burst}
+def gateway_burst_scaled(factor: int, seed: int = 20260729):
+    """``gateway_burst`` at ``factor``x the arrival rate, same span.
+
+    Counts scale by ``factor`` and intervals compress by it; the on-off
+    burst *periods* (``on_mean``/``off_mean``) stay fixed so the burst
+    phase structure is the same traffic shape, just denser.  Seed is
+    offset by the factor so the scaled streams are decorrelated from x1
+    rather than a superset of it.
+    """
+    if factor < 2:
+        raise ValueError(f"factor {factor} < 2: use gateway_burst for x1")
+    seed = seed + factor
+    interactive = arrivals.poisson(
+        20 * factor, mean_interval=400_000 / factor, seed=seed,
+        start=50_000,
+    )
+    batch = arrivals.on_off(
+        12 * factor, seed=seed + 1, burst_interval=120_000 / factor,
+        on_mean=800_000, off_mean=1_600_000, start=150_000,
+    )
+    seg = arrivals.deterministic(
+        3 * factor, interval=max(2_500_000 // factor, 1), start=600_000
+    )
+    return from_streams(
+        f"gateway_burst_x{factor}",
+        seed,
+        [
+            dict(kind="lm", qos="interactive", arrivals=interactive,
+                 payload=dict(prompt_len=4, max_new=8)),
+            dict(kind="lm", qos="batch", arrivals=batch,
+                 payload=dict(prompt_len=24, max_new=4)),
+            dict(kind="seg", qos="seg", arrivals=seg,
+                 payload=dict(h=96, w=80)),
+        ],
+        description=(
+            f"gateway_burst traffic shape at {factor}x arrival rate over "
+            f"the same span — the fabric saturation workload of "
+            f"benchmarks/fabric.py"
+        ),
+        meta=dict(
+            round_budget=800_000,
+            shares=dict(interactive=0.4, batch=0.3, seg=0.3),
+            scale_factor=factor,
+            base_trace="gateway_burst",
+            lm="minitron_4b smoke",
+            seg="unet hw=(96,80) in_ch=4 base=8 depth=2 cps=1",
+        ),
+    )
+
+
+BUILDERS = {
+    "gateway_burst": gateway_burst,
+    "gateway_burst_x10": lambda: gateway_burst_scaled(10),
+    "gateway_burst_x100": lambda: gateway_burst_scaled(100),
+}
 
 
 def main(argv=None) -> int:

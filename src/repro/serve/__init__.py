@@ -11,8 +11,17 @@ primitives stay importable directly for single-workload use.  Heavy
 engine imports (jax, models) are deferred until an adapter is built;
 ``SegEngine`` re-exports lazily so importing one workload never pays for
 the other.
+
+:class:`~repro.serve.fabric.Fabric` scales the gateway out: N shards on
+independent :class:`~repro.serve.clock.RoundClock` instances behind a
+deterministic router, with work stealing and a
+:class:`~repro.serve.clock.FleetLedger` whose aggregates are exact to
+the integer.  :mod:`repro.serve.modeled` provides pricing-only adapters
+so fabric-scale benchmarks never build a jax engine.
 """
-from . import engine, gateway, queue, serve_step  # noqa: F401
+from . import clock, engine, fabric, gateway, modeled, queue, serve_step  # noqa: F401
+from .clock import FleetLedger, RoundClock  # noqa: F401
+from .fabric import Fabric  # noqa: F401
 from .gateway import (  # noqa: F401
     Gateway,
     GatewayRequest,
@@ -20,6 +29,7 @@ from .gateway import (  # noqa: F401
     SegAdapter,
     StalePlanError,
 )
+from .modeled import ModeledLMAdapter, ModeledSegAdapter, modeled_materializer  # noqa: F401
 from .queue import FifoQueue, SlotTable  # noqa: F401
 
 

@@ -106,11 +106,13 @@ high-information cores of an image while its background is still queued.
 from __future__ import annotations
 
 import math
+from collections import deque
 from dataclasses import dataclass
 from typing import Any
 
 from repro.core import cycle_model as cm
 
+from .clock import RoundClock
 from .queue import FifoQueue
 
 POLICIES = ("fifo", "fair", "edf")
@@ -219,7 +221,16 @@ class GatewayRequest:
 #                   new micro-step *starts* at or past it, but a step
 #                   started before it may run across — arrivals queue
 #                   behind in-flight work, they do not interrupt it.
-#                   Returns (consumed, completed GatewayRequests, events)
+#                   Returns (consumed, completions, events) where each
+#                   completion is a (GatewayRequest, offset) pair: offset
+#                   is the cycles consumed *within this call* at the
+#                   micro-step the request finished on, so the gateway
+#                   stamps each completion at its own point in the round
+#                   instead of smearing a whole chunk's latency onto a
+#                   request that finished on its first micro-step.
+#                   Offsets must be non-decreasing in return order.
+#                   (Bare GatewayRequests are accepted for backward
+#                   compatibility and stamp at the call's full consumed.)
 #   total_ops       useful-op account for aggregate GOPS/W
 #   verify_info()   None, or (plan params fingerprint, served fingerprint)
 #   install_fallback(reason)  drop a stale plan for the uniform schedule
@@ -373,7 +384,7 @@ class LMAdapter:
     def work(self, budget: int, qos: str | None = None, force: bool = False,
              soft_limit: int | None = None):
         consumed = 0
-        completed: list[GatewayRequest] = []
+        completed: list[tuple[GatewayRequest, int]] = []
         sc = self._step_cycles
         if self.preemptive:
             # 1. chunked prefill, admission order: each token charged at
@@ -429,12 +440,14 @@ class LMAdapter:
             )
             consumed += cost
             self.total_ops += self._step_ops * len(decoding)
+            # every request that finished on this decode step finished at
+            # *this* step's offset, not at the end of the whole chunk
             completed.extend(
-                self._inflight.pop(id(r))
+                (self._inflight.pop(id(r)), consumed)
                 for r in finished
                 if id(r) in self._inflight
             )
-        for greq in completed:
+        for greq, _ in completed:
             if greq in self._order:
                 self._order.remove(greq)
         return consumed, completed, []
@@ -557,7 +570,7 @@ class SegAdapter:
     def work(self, budget: int, qos: str | None = None, force: bool = False,
              soft_limit: int | None = None):
         consumed = 0
-        completed: list[GatewayRequest] = []
+        completed: list[tuple[GatewayRequest, int]] = []
         events = []
         group = ... if qos is None else qos
         while True:
@@ -581,7 +594,8 @@ class SegAdapter:
                     greq = self._inflight.pop(ev.rid, None)
                     if greq is not None:
                         self.total_ops += ev.request.result.ops
-                        completed.append(greq)
+                        # finished when its last tile emitted, offset-exact
+                        completed.append((greq, consumed))
             events.extend(evs)
         return consumed, completed, events
 
@@ -613,6 +627,10 @@ class Gateway:
       deadline_factor: default EDF deadline = admission estimate x this.
       on_event: optional callback fed every streamed
         :class:`~repro.segserve.engine.TileEvent` (progressive display).
+      max_kept_events: how many recent tile events ``Gateway.tile_events``
+        retains (a bounded deque — the oldest drop off as new ones land).
+        ``on_event`` stays the lossless path; dropped-event counts surface
+        in ``stats()['tile_events_dropped']``.
     """
 
     def __init__(
@@ -625,6 +643,7 @@ class Gateway:
         on_stale: str = "reject",
         deadline_factor: float = 4.0,
         on_event=None,
+        max_kept_events: int = 100_000,
     ):
         policy = _POLICY_ALIASES.get(policy, policy)
         if policy not in POLICIES:
@@ -656,23 +675,55 @@ class Gateway:
         self.queue: FifoQueue[GatewayRequest] = FifoQueue()
         self.requests: list[GatewayRequest] = []
         self._live: dict[int, GatewayRequest] = {}  # admitted, unfinished
-        # NOTE: grows for the life of the gateway (one small record per
-        # emitted tile); long-running consumers should pass on_event and
-        # clear this list between reporting windows.
-        self.tile_events: list = []
-        self.clock = 0  # modeled cycles (round start while stepping)
-        self.rounds = 0
-        self.forced = 0  # forced-progress overdraft steps (liveness)
+        # bounded recent-events window (one small record per emitted tile;
+        # unbounded growth was a documented leak, N-times worse per fabric
+        # shard) — on_event remains the lossless streaming path
+        if max_kept_events < 1:
+            raise ValueError(f"max_kept_events {max_kept_events} < 1")
+        self.tile_events: deque = deque(maxlen=int(max_kept_events))
+        self._tile_events_seen = 0  # lifetime emitted (kept + dropped)
+        # the modeled cycle clock + per-round ledger, extracted to
+        # serve.clock so the single gateway and every fabric shard run
+        # the exact same accounting arithmetic
+        self._clock = RoundClock()
         self._deficit = {c: 0.0 for c in self.shares}
         self._admit_charges: dict[str, int] = {}
-        self._round_spent = 0  # intra-round modeled time (work + idle)
-        self._round_worked = 0  # cycles actually consumed this round
-        self._round_class_worked: dict[str, int] = {}  # per-class, per-round
         self._granted = set()  # classes granted quantum this round
         self._class_stalled: dict[str, int] = {}  # consecutive dry rounds
         self._pending_swap: dict[str, Any] = {}
         self.plan_swaps: list[dict] = []  # installed hot-reloads
         self._next_rid = 0
+
+    # Historical surface: ``gw.clock`` / ``gw.rounds`` / ``gw.forced`` were
+    # plain counters before the RoundClock extraction; every test, bench
+    # and replay harness reads them, so they stay as read-only views.
+    @property
+    def clock(self) -> int:
+        """Absolute modeled clock (round start while stepping)."""
+        return self._clock.cycles
+
+    @property
+    def rounds(self) -> int:
+        return self._clock.rounds
+
+    @property
+    def forced(self) -> int:
+        """Forced-progress overdraft steps (liveness escapes)."""
+        return self._clock.forced
+
+    @property
+    def round_clock(self) -> RoundClock:
+        """The underlying :class:`~repro.serve.clock.RoundClock` — read-only
+        use (fleet-ledger additivity checks diff its cumulative counters)."""
+        return self._clock
+
+    def ledger_snapshot(self) -> dict:
+        """Cumulative integer accounts a fleet ledger diffs per round."""
+        return dict(
+            ops=sum(a.total_ops for a in self.adapters.values()),
+            worked=self._clock.worked_total,
+            class_worked=dict(self._clock.class_worked_total),
+        )
 
     # ------------------------------------------------------------- submit
 
@@ -718,6 +769,52 @@ class Gateway:
         self.queue.push(greq)
         self.requests.append(greq)
         return greq
+
+    # ------------------------------------------------------ work stealing
+
+    def export_queued(self, n: int) -> list[GatewayRequest]:
+        """Give up to ``n`` *queued* requests from the queue tail — the
+        work-stealing donor side (:class:`~repro.serve.fabric.Fabric`).
+
+        Only never-admitted requests move: admitted work owns engine slot
+        state (KV cache rows, stitching canvases) that cannot migrate.
+        Taking from the tail preserves the donor's own FIFO semantics —
+        its oldest requests keep their place.  Returned in arrival order.
+        """
+        take = min(int(n), len(self.queue))
+        out = [self.queue.pop_at(len(self.queue) - 1) for _ in range(take)]
+        out.reverse()  # popped newest-first; hand back in arrival order
+        if out:
+            gone = {id(g) for g in out}
+            self.requests = [
+                g for g in self.requests if id(g) not in gone
+            ]
+        return out
+
+    def import_queued(self, greqs) -> None:
+        """Accept requests exported from another gateway (the thief side).
+
+        Each request is re-keyed onto this gateway's rid counter — rids
+        index the ``_live`` table, so an imported request keeping its
+        donor-assigned rid could collide with a local one.  Arrival
+        stamps travel with the request: latency is measured from the
+        original arrival, wherever it completes.
+        """
+        for g in greqs:
+            if g.kind not in self.adapters:
+                raise ValueError(
+                    f"imported request kind {g.kind!r} not served here "
+                    f"(kinds: {sorted(self.adapters)})"
+                )
+            if g.qos not in self.shares:
+                raise ValueError(
+                    f"imported request class {g.qos!r} undeclared in "
+                    f"shares (declared: {sorted(self.shares)})"
+                )
+            g.rid = self._next_rid
+            self._next_rid += 1
+            self.queue.push(g)
+            self.requests.append(g)
 
     # --------------------------------------------------------- hot reload
 
@@ -789,11 +886,25 @@ class Gateway:
         return list(self.shares)
 
     def _admission_phase(self) -> None:
+        # A kind whose plan swap is draining is *held* — an operator
+        # action, not arrival-order semantics — so every policy's scan
+        # skips held-kind requests instead of letting one freeze admission
+        # for the other kinds behind it (the swap-hold head-of-line leak).
+        held = self._pending_swap
         if self.policy == "fifo":
-            # strict arrival order: a full engine at the head blocks the
-            # whole queue (the classic failure mode the other policies fix)
-            while self.queue and self._try_admit(0):
-                pass
+            # strict arrival order among admissible kinds: a full engine
+            # at the (non-held) head blocks the whole queue — the classic
+            # failure mode the other policies fix
+            progress = True
+            while progress and self.queue:
+                progress = False
+                idx = next(
+                    (i for i, g in enumerate(self.queue)
+                     if g.kind not in held),
+                    None,
+                )
+                if idx is not None and self._try_admit(idx):
+                    progress = True
         elif self.policy == "fair":
             # round-robin classes, oldest-first within a class; a blocked
             # class never blocks the others
@@ -802,7 +913,8 @@ class Gateway:
                 progress = False
                 for c in self._classes():
                     idx = next(
-                        (i for i, g in enumerate(self.queue) if g.qos == c),
+                        (i for i, g in enumerate(self.queue)
+                         if g.qos == c and g.kind not in held),
                         None,
                     )
                     if idx is not None and self._try_admit(idx):
@@ -851,18 +963,35 @@ class Gateway:
     def _do_work(self, kind: str, budget: float, qos: str | None,
                  force: bool = False, soft: float | None = None) -> int:
         adapter = self.adapters[kind]
+        base = self._clock.round_spent  # intra-round offset of this call
         consumed, completed, events = adapter.work(
             int(budget), qos=qos, force=force,
             soft_limit=None if soft is None else int(soft),
         )
-        self._round_spent += consumed
-        self._round_worked += consumed
-        if qos is not None:
-            self._round_class_worked[qos] = (
-                self._round_class_worked.get(qos, 0) + consumed
-            )
-        stamp = self.clock + min(self._round_spent, self.round_budget)
-        for greq in completed:
+        self._clock.record_work(consumed, qos)
+        prev_off = 0
+        for item in completed:
+            # protocol v3: (greq, offset) — stamp each completion at its
+            # own micro-step's offset, so a request that finished on the
+            # first step of a large quantum does not inherit the whole
+            # chunk's latency.  Bare greqs (legacy adapters) stamp at the
+            # call's full consumed, the pre-fix behavior.
+            if isinstance(item, tuple):
+                greq, off = item
+            else:
+                greq, off = item, consumed
+            if off < prev_off:
+                raise AssertionError(
+                    f"adapter {kind!r} returned decreasing completion "
+                    f"offsets ({off} after {prev_off})"
+                )
+            prev_off = off
+            stamp = self.clock + min(base + off, self.round_budget)
+            if stamp < greq.arrival:
+                raise AssertionError(
+                    f"completion stamp {stamp} precedes arrival "
+                    f"{greq.arrival} for request {greq.rid}"
+                )
             greq.finished = stamp
             greq.finished_round = self.rounds
             self._live.pop(greq.rid, None)
@@ -870,7 +999,8 @@ class Gateway:
             # long-running gateway does not pin every served image/prompt
             greq.payload = None
         for ev in events:
-            self.tile_events.append(ev)
+            self.tile_events.append(ev)  # bounded: oldest drop off
+            self._tile_events_seen += 1
             if self.on_event is not None:
                 self.on_event(ev)
         return consumed
@@ -902,7 +1032,7 @@ class Gateway:
         for qos in list(self._admit_charges):
             charged = self._admit_charges.pop(qos)
             if charged:
-                self._round_spent += charged
+                self._clock.record_spent(charged)
                 if self.policy == "fair":
                     self._deficit[qos] = (
                         self._deficit.get(qos, 0.0) - charged
@@ -924,7 +1054,7 @@ class Gateway:
         so the grant is pro-rated, never retroactive."""
         if self.policy != "fair":
             return
-        remaining = max(self.round_budget - self._round_spent, 0)
+        remaining = max(self.round_budget - self._clock.round_spent, 0)
         for c, share in self.shares.items():
             if c not in self._granted and self._class_has_work(c):
                 self._deficit[c] += share * remaining
@@ -940,12 +1070,13 @@ class Gateway:
         — so completion stamps after an arrival are never earlier than
         the arrival itself."""
         limit = min(int(limit), self.round_budget)
+        clk = self._clock
         self._apply_admit_charges()
         progress = True
-        while progress and self._round_spent < limit:
+        while progress and clk.round_spent < limit:
             progress = False
-            soft = limit - self._round_spent  # segment boundary offset
-            room = self.round_budget - self._round_spent  # physical round
+            soft = limit - clk.round_spent  # segment boundary offset
+            room = self.round_budget - clk.round_spent  # physical round
             if room < 1:
                 break
             if self.policy == "fair":
@@ -959,8 +1090,8 @@ class Gateway:
                     key=lambda c: -self._deficit.get(c, 0.0),
                 )
                 for c in order:
-                    soft = limit - self._round_spent
-                    room = self.round_budget - self._round_spent
+                    soft = limit - clk.round_spent
+                    room = self.round_budget - clk.round_spent
                     if soft <= 0 or room < 1:
                         break
                     budget = min(self._deficit.get(c, 0.0), room)
@@ -986,8 +1117,8 @@ class Gateway:
                     # non-negative), handed out in urgency order — the
                     # oldest live class first, not declaration order
                     for c in self._class_order():
-                        soft = limit - self._round_spent
-                        room = self.round_budget - self._round_spent
+                        soft = limit - clk.round_spent
+                        room = self.round_budget - clk.round_spent
                         if soft <= 0 or room < 1:
                             break
                         used = self._work_class(c, room, soft=soft)
@@ -995,14 +1126,14 @@ class Gateway:
                             progress = True
             else:
                 for c in self._class_order():
-                    soft = limit - self._round_spent
-                    room = self.round_budget - self._round_spent
+                    soft = limit - clk.round_spent
+                    room = self.round_budget - clk.round_spent
                     if soft <= 0 or room < 1:
                         break
                     if self._work_class(c, room, soft=soft):
                         progress = True
         # idle time flows: the intra-round clock reaches the boundary
-        self._round_spent = max(self._round_spent, limit)
+        clk.idle_to(limit)
 
     def _stall_limit(self) -> int:
         """Consecutive zero-progress rounds that prove a class's cheapest
@@ -1031,19 +1162,19 @@ class Gateway:
         Forced steps are counted in ``stats()['forced']`` — a
         modeled-capacity smell either way."""
         if self.policy != "fair":
-            if self._round_worked == 0 and any(
+            if self._clock.round_worked == 0 and any(
                 a.has_work() for a in self.adapters.values()
             ):
                 for c in self._class_order():
                     if self._class_has_work(c):
                         if self._work_class(c, self.round_budget,
                                             force=True):
-                            self.forced += 1
+                            self._clock.forced += 1
                             return
             return
         for c in self._classes():
             if not self._class_has_work(c) or \
-                    self._round_class_worked.get(c, 0) > 0:
+                    self._clock.round_class_worked.get(c, 0) > 0:
                 self._class_stalled[c] = 0
                 continue
             self._class_stalled[c] = self._class_stalled.get(c, 0) + 1
@@ -1051,7 +1182,7 @@ class Gateway:
                 continue
             used = self._work_class(c, self.round_budget, force=True)
             if used:
-                self.forced += 1
+                self._clock.forced += 1
                 self._deficit[c] = self._deficit.get(c, 0.0) - used
             self._class_stalled[c] = 0
 
@@ -1084,9 +1215,7 @@ class Gateway:
                 f"round [{self.clock}, {self.clock + self.round_budget}) — "
                 f"defer it to its own round"
             )
-        self._round_spent = 0
-        self._round_worked = 0
-        self._round_class_worked = {}
+        self._clock.begin_round()
         self._install_pending_swaps()
         # backlog: arrivals stamped at or before the round start
         while arr and arr[0][0] <= self.clock:
@@ -1102,8 +1231,7 @@ class Gateway:
             self._grant_midround()
         self._execute(self.round_budget)
         self._check_starvation()
-        self.clock += self.round_budget
-        self.rounds += 1
+        self._clock.end_round(self.round_budget)
 
     def advance_to(self, cycle: int) -> None:
         """Run scheduling rounds until the modeled clock reaches
@@ -1161,6 +1289,12 @@ class Gateway:
             gops=gops,
             gops_w=gops / power,
             forced=self.forced,
+            worked_cycles=self._clock.worked_total,
+            class_worked_cycles=dict(self._clock.class_worked_total),
+            tile_events_seen=self._tile_events_seen,
+            tile_events_kept=len(self.tile_events),
+            tile_events_dropped=self._tile_events_seen
+            - len(self.tile_events),
             plan_swaps=list(self.plan_swaps),
             fallbacks={
                 k: a.fallback_reason

@@ -77,32 +77,63 @@ class FifoQueue(Generic[T]):
     (``__iter__``, ``peek``) and remove by position (``pop_at``), so FIFO
     stays the default and reordering is an explicit policy decision at the
     call site, never queue state.
+
+    Layout: a backing list with a head index.  ``list.pop(0)`` is O(n) in
+    the backlog, which made the admission phase quadratic under fabric-
+    scale replay (10–100x arrival rates); popping the head now just
+    advances the index (amortized O(1) — the consumed prefix is compacted
+    away once it dominates the backing list).  Interior ``pop_at`` stays
+    O(n - i), which the scanning policies pay anyway.
     """
 
+    # compact when the dead prefix is past this size *and* at least half
+    # the backing list — amortized O(1) head pops, bounded slack memory
+    _COMPACT_MIN = 64
+
     def __init__(self, items: Iterable[T] = ()):  # pragma: no branch
-        self._items: list[T] = list(items)
+        self._items: list[T | None] = list(items)
+        self._head = 0
 
     def push(self, item: T) -> None:
         self._items.append(item)
 
     def __len__(self) -> int:
-        return len(self._items)
+        return len(self._items) - self._head
 
     def __bool__(self) -> bool:
-        return bool(self._items)
+        return self._head < len(self._items)
 
     def __iter__(self):
         """Arrival-order iteration (do not mutate while iterating)."""
-        return iter(self._items)
+        return iter(self._items[self._head:])
+
+    def _index(self, i: int) -> int:
+        """Backing-list index of logical position ``i`` (supports the
+        usual negative indexing), bounds-checked against the live span."""
+        idx = (len(self._items) if i < 0 else self._head) + i
+        if not self._head <= idx < len(self._items):
+            raise IndexError(f"queue index {i} out of range (len {len(self)})")
+        return idx
 
     def peek(self, i: int = 0) -> T:
         """The ``i``-th waiting item (0 = oldest) without consuming it."""
-        return self._items[i]
+        return self._items[self._index(i)]
 
     def pop_at(self, i: int) -> T:
         """Remove and return the ``i``-th waiting item (0 = oldest) — the
         out-of-order admission primitive for non-FIFO policies."""
-        return self._items.pop(i)
+        idx = self._index(i)
+        item = self._items[idx]
+        if idx == self._head:
+            self._items[idx] = None  # drop the reference immediately
+            self._head += 1
+            if self._head >= self._COMPACT_MIN and \
+                    self._head * 2 >= len(self._items):
+                del self._items[:self._head]
+                self._head = 0
+        else:
+            del self._items[idx]
+        return item  # type: ignore[return-value]
 
     def pump(
         self,
@@ -117,9 +148,9 @@ class FifoQueue(Generic[T]):
         requests were admitted.
         """
         n = 0
-        while self._items and slots.free_index() is not None:
-            if not admit(self._items[0]):
+        while self and slots.free_index() is not None:
+            if not admit(self._items[self._head]):
                 break
-            self._items.pop(0)
+            self.pop_at(0)
             n += 1
         return n

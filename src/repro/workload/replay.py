@@ -13,6 +13,15 @@ Payloads are materialized from each request's compact spec and the trace
 seed (deterministic per request index), so replaying the same trace twice
 — or on different machines — submits bit-identical prompts and images.
 
+The same harness drives a :class:`~repro.serve.fabric.Fabric`: the fabric
+exposes the gateway surface (``clock``/``round_budget``/``step_round``/
+``pending``/``stats``), its ``step_round`` routes each injected arrival
+to a shard, and the shard then sees the identical open-loop contract a
+single gateway does — arrivals at exact mid-round offsets, never waiting
+on completions.  Scheduling currency is the lock-step fleet clock, so
+one trace replays against one chip or N without edits (the fabric bench
+replays the same scaled trace against both and compares).
+
 ``replay`` returns a summary in the shared bench-tracker schema: one row
 per QoS class (modeled p50/p99 latency) plus the aggregate GOPS/W row,
 and the raw per-class stats dict for programmatic gates.
@@ -79,8 +88,12 @@ def replay(
 ) -> dict:
     """Drive ``gateway`` through ``trace`` open-loop; returns the summary.
 
-    ``materializers`` maps adapter kind to a materializer (see
-    :func:`lm_materializer` / :func:`seg_materializer`).  Every QoS class
+    ``gateway`` is a single :class:`~repro.serve.gateway.Gateway` or a
+    :class:`~repro.serve.fabric.Fabric` (routing happens inside the
+    fabric's ``step_round``, at arrival injection).  ``materializers``
+    maps adapter kind to a materializer (see :func:`lm_materializer` /
+    :func:`seg_materializer`; modeled adapters use
+    :func:`repro.serve.modeled.modeled_materializer`).  Every QoS class
     the trace carries must be declared in the gateway's ``shares``.
     """
     missing = set(trace.kinds) - set(gateway.adapters)

@@ -1,6 +1,7 @@
 """Hypothesis with a fallback: the real library when installed, else a
 minimal deterministic shim implementing exactly the subset this suite uses
-(``st.integers``, ``st.lists``, ``st.data``; ``@given``; ``@settings``).
+(``st.integers``, ``st.lists``, ``st.sampled_from``, ``st.data``;
+``@given``; ``@settings``).
 
 The shim draws a fixed number of pseudo-random examples per test (seeded by
 the test name, so runs are reproducible) instead of hypothesis' adaptive
@@ -53,6 +54,11 @@ except ModuleNotFoundError:
                 return [elements.draw(rnd) for _ in range(n)]
 
             return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            seq = list(options)
+            return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
 
         @staticmethod
         def data() -> _Strategy:

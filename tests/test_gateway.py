@@ -93,7 +93,8 @@ class FakeAdapter:
             self.total_ops += chunk  # 1 op/cycle: GOPS plumbing stays live
             if self._remaining[rid] == 0:
                 del self._remaining[rid]
-                completed.append(self._inflight.pop(rid))
+                # protocol v3: completion at its own micro-step's offset
+                completed.append((self._inflight.pop(rid), consumed))
         self.work_calls.append((budget, consumed, forced))
         return consumed, completed, []
 
@@ -440,8 +441,103 @@ def test_gateway_serves_mixed_real_traffic():
     assert all(len(r.handle.out) == 4 for r in lms)
     assert len(prebuilt.handle.out) == 4
     assert seg.handle.result is not None
-    assert seen and seen == gw.tile_events
+    assert seen and seen == list(gw.tile_events)
     st = gw.stats()
     assert st["per_class"]["lm"]["completed"] == 4
     assert st["per_class"]["seg"]["completed"] == 1
     assert st["gops_w"] > 0
+
+
+# --------------------------------------------- per-completion stamp offsets
+
+
+def test_per_completion_stamps_within_one_work_call():
+    """Protocol v3 regression: two requests finishing inside one work()
+    call are stamped at their own micro-step offsets.  Before the fix
+    both inherited the call's full consumed — the short request paid the
+    long one's latency."""
+    ad = FakeAdapter("a", slots=2, unit=1_000)
+    gw = Gateway([ad], policy="fair", round_budget=10_000)
+    r1 = gw.submit("a", 1_000)
+    r2 = gw.submit("a", 3_000)
+    gw.step_round()
+    assert r1.done and r2.done
+    # oldest-first micro-steps: r1 finishes on the first 1000-cycle step,
+    # r2 three steps later — distinct stamps, non-decreasing, >= arrival
+    assert r1.finished == 1_000
+    assert r2.finished == 4_000
+    assert r1.arrival <= r1.finished <= r2.finished
+
+
+def test_legacy_bare_completions_stamp_at_full_consumed():
+    """Adapters predating protocol v3 return bare greqs; they keep the
+    old semantics — every completion stamped at the call's consumed."""
+
+    class LegacyAdapter(FakeAdapter):
+        def work(self, budget, qos=None, force=False, soft_limit=None):
+            consumed, completed, events = super().work(
+                budget, qos=qos, force=force, soft_limit=soft_limit)
+            return consumed, [g for g, _ in completed], events
+
+    ad = LegacyAdapter("a", slots=2, unit=1_000)
+    gw = Gateway([ad], policy="fair", round_budget=10_000)
+    r1 = gw.submit("a", 1_000)
+    r2 = gw.submit("a", 3_000)
+    gw.step_round()
+    assert r1.done and r2.done
+    assert r1.finished == r2.finished == 4_000
+
+
+def test_decreasing_completion_offsets_rejected():
+    """The gateway refuses an adapter whose completion offsets go
+    backwards — a stamp that time-travels would corrupt latency stats."""
+
+    class ShuffledAdapter(FakeAdapter):
+        def work(self, budget, qos=None, force=False, soft_limit=None):
+            consumed, completed, events = super().work(
+                budget, qos=qos, force=force, soft_limit=soft_limit)
+            return consumed, list(reversed(completed)), events
+
+    ad = ShuffledAdapter("a", slots=2, unit=1_000)
+    gw = Gateway([ad], policy="fair", round_budget=10_000)
+    gw.submit("a", 1_000)
+    gw.submit("a", 3_000)
+    with pytest.raises(AssertionError, match="decreasing completion"):
+        gw.step_round()
+
+
+# ------------------------------------------------- bounded event window
+
+
+class EventfulAdapter(FakeAdapter):
+    """FakeAdapter emitting one event per micro-step worked."""
+
+    def work(self, budget, qos=None, force=False, soft_limit=None):
+        seq0 = self.total_ops // self.unit
+        consumed, completed, _ = super().work(
+            budget, qos=qos, force=force, soft_limit=soft_limit)
+        events = [dict(seq=seq0 + i) for i in range(consumed // self.unit)]
+        return consumed, completed, events
+
+
+def test_tile_events_bounded_and_on_event_lossless():
+    """tile_events keeps only the newest max_kept_events records (the
+    unbounded-growth leak), stats() accounts the drop, and the on_event
+    callback still sees every event."""
+    seen = []
+    ad = EventfulAdapter("a", slots=2, unit=1_000)
+    gw = Gateway([ad], policy="fair", round_budget=4_000,
+                 max_kept_events=3, on_event=seen.append)
+    r1 = gw.submit("a", 4_000)
+    r2 = gw.submit("a", 4_000)
+    gw.drain(max_rounds=50)
+    assert r1.done and r2.done
+    assert len(seen) == 8  # callback: lossless, 8 micro-steps total
+    assert [e["seq"] for e in seen] == list(range(8))
+    assert list(gw.tile_events) == seen[-3:]  # window: newest 3 survive
+    st = gw.stats()
+    assert st["tile_events_seen"] == 8
+    assert st["tile_events_kept"] == 3
+    assert st["tile_events_dropped"] == 5
+    with pytest.raises(ValueError):
+        Gateway([FakeAdapter("a")], max_kept_events=0)

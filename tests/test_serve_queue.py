@@ -1,6 +1,7 @@
 """Shared serving primitives (serve.queue): the slot table and admission
 queue both engines — LM decode and tiled segmentation — are built on."""
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.serve.queue import FifoQueue, SlotTable
 
@@ -78,3 +79,54 @@ def test_lm_engine_runs_on_shared_primitives():
     assert len(done) == 3
     assert all(len(r.out) == 4 for r in done)
     assert not eng.slots.any_active()
+
+
+# ------------------------------------------- head-index layout equivalence
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_fifo_queue_matches_plain_list_model(ops):
+    """Behavioral regression for the O(1)-head-pop layout: a FifoQueue
+    driven by an arbitrary push/pop_at/peek sequence stays observationally
+    identical to a plain python list (the pre-fix representation),
+    including negative indices and IndexError edges."""
+    q: FifoQueue[int] = FifoQueue()
+    model: list[int] = []
+    serial = 0
+    for op in ops:
+        if op <= 1 or not model:  # push (biased: queues mostly grow)
+            q.push(serial)
+            model.append(serial)
+            serial += 1
+        elif op == 2:  # head pop — the hot admission path
+            assert q.pop_at(0) == model.pop(0)
+        elif op == 3:  # mid-queue pop (policy scans pop by index)
+            i = serial % len(model)
+            assert q.pop_at(i) == model.pop(i)
+        elif op == 4:  # negative peek
+            assert q.peek(-1) == model[-1]
+            assert q.peek(-len(model)) == model[0]
+        else:  # full observational check
+            assert len(q) == len(model)
+            assert bool(q) == bool(model)
+            assert list(q) == model
+            if model:
+                assert q.peek(0) == model[0]
+            with pytest.raises(IndexError):
+                q.peek(len(model))
+            with pytest.raises(IndexError):
+                q.pop_at(-len(model) - 1)
+    assert list(q) == model
+
+
+def test_fifo_queue_head_pops_compact_storage():
+    """Many head pops must not pin the popped prefix: after draining a
+    long queue the backing list stays proportional to the live span."""
+    q: FifoQueue[int] = FifoQueue(range(1_000))
+    for i in range(990):
+        assert q.pop_at(0) == i
+    assert len(q) == 10
+    assert list(q) == list(range(990, 1_000))
+    # compaction bound: slack never exceeds max(live span, threshold)
+    assert len(q._items) <= 2 * max(len(q), FifoQueue._COMPACT_MIN)

@@ -541,3 +541,31 @@ def test_seg_group_scoped_stepping_bit_identical():
 
     for a, b in zip(serve(True), serve(False)):
         assert np.array_equal(a, b)
+
+def test_fifo_swap_hold_does_not_block_other_kinds():
+    """Regression (swap-hold head-of-line leak): under policy='fifo', a
+    pending plan swap holds admission for its own kind only.  Before the
+    fix the held request at the queue head froze the whole FIFO scan, so
+    traffic for every other kind queued behind it starved until the swap
+    drained — here, LM-like 'a' is mid-swap while seg-like 'b' arrives."""
+    a = SwappableAdapter("a", slots=1, unit=500)
+    b = FakeAdapter("b", slots=2, unit=500)
+    gw = Gateway([a, b], policy="fifo", round_budget=2_000)
+    inflight = gw.submit("a", 3_000)  # occupies the only 'a' slot
+    gw.step_round()
+    assert inflight.admitted is not None and not inflight.done
+    gw.swap_plan("a", SwappablePlan("v2", _fp(a)))
+    assert gw._pending_swap  # busy: swap deferred, kind 'a' held
+    held = gw.submit("a", 1_000)  # FIFO head among queued, held kind
+    others = [gw.submit("b", 500) for _ in range(3)]
+    gw.step_round()
+    # the held 'a' stays queued; 'b' traffic behind it fills its slots
+    assert held.admitted is None
+    assert sum(g.admitted is not None for g in others) == b.slots
+    assert any(g.done for g in others)
+    gw.drain(max_rounds=100)
+    assert a.installed == ["v2"]
+    assert all(g.done for g in [inflight, held] + others)
+    # the held request was admitted only once the swap had installed
+    [swap] = gw.plan_swaps
+    assert held.admitted_round >= swap["round"]
