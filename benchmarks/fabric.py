@@ -31,6 +31,13 @@ Gates (each raises, so CI fails loudly):
 4. **Completion conservation** — every run completes every request in
    its trace; nothing is dropped by routing or stealing.
 
+The headline run (``deficit`` at x10) additionally carries a
+:mod:`repro.obs` ``RecordingSink``: the payload's ``spans`` block
+decomposes its per-class p50/p99 requests into queued / executing /
+preempted cycles, and the run raises unless the stream's execution
+attribution reconciles integer-exactly with every shard's
+``RoundClock.worked_total`` *and* the ``FleetLedger`` totals.
+
 Router comparison rows (``class`` / ``p2c`` / ``deficit``) are recorded
 at x10; the headline fabric configuration is ``deficit`` routing with
 work stealing on.  ``scripts/bench_diff.py`` diffs fabric rows by
@@ -91,7 +98,7 @@ def _replay(target, trace):
     return summary
 
 
-def _run_one(trace, shares, *, n_shards, router=None):
+def _run_one(trace, shares, *, n_shards, router=None, record_spans=False):
     """One replay: single gateway (``n_shards=1``, ``router=None``) or an
     N-shard fabric.  Returns (summary, fabric-or-gateway)."""
     from repro.serve.fabric import Fabric
@@ -99,11 +106,36 @@ def _run_one(trace, shares, *, n_shards, router=None):
     if n_shards == 1 and router is None:
         gw = _mk_gateway(shares)
         return _replay(gw, trace), gw
+    sink = None
+    if record_spans:
+        from repro.obs import RecordingSink
+
+        sink = RecordingSink()
     fab = Fabric(
         [_mk_gateway(shares) for _ in range(n_shards)],
-        router=router, seed=FABRIC_SEED,
+        router=router, seed=FABRIC_SEED, sink=sink,
     )
-    return _replay(fab, trace), fab
+    summary = _replay(fab, trace)
+    if record_spans:
+        from repro.obs import assemble, breakdown, reconcile
+
+        rec = reconcile(
+            sink.events, [g.round_clock for g in fab.shards],
+            ledger=fab.ledger,
+        )
+        if not rec["holds"]:
+            raise RuntimeError(
+                f"fleet span attribution does not reconcile: "
+                f"{rec['total_exec']} exec-event cycles vs "
+                f"{rec['total_worked']} worked cycles (ledger "
+                f"{sum(rec.get('ledger_worked', []))})"
+            )
+        summary["spans"] = dict(
+            per_class=breakdown(assemble(sink.events)),
+            reconcile=rec,
+            events=len(sink.events),
+        )
+    return summary, fab
 
 
 def _check_completion(summary, trace, label):
@@ -149,10 +181,15 @@ def run(*, json_path: str | None = "BENCH_fabric.json"):
         # oversubscribed — the next capacity-planning datapoint
         (f"fabric{N_SHARDS}-deficit/x100", "x100", N_SHARDS, "deficit"),
     ]
+    headline = f"fabric{N_SHARDS}-deficit/x10"
     for label, tkey, n_shards, router in plan:
         trace = traces[tkey]
         summary, target = _run_one(
-            trace, shares, n_shards=n_shards, router=router
+            trace, shares, n_shards=n_shards, router=router,
+            # telemetry rides the headline configuration only; the in-run
+            # reconcile raise gates exec attribution == per-shard
+            # RoundClock totals == FleetLedger totals, to the integer
+            record_spans=label == headline,
         )
         _check_completion(summary, trace, label)
         extra = dict(label=label, trace=tkey, n_shards=n_shards,
@@ -227,6 +264,7 @@ def run(*, json_path: str | None = "BENCH_fabric.json"):
             round_budget=ROUND_BUDGET,
             n_shards=N_SHARDS,
             shares=shares,
+            spans=summaries[fab10]["spans"],
             rows=payload_rows,
             gate=dict(
                 holds=True,  # every sub-gate raised above otherwise

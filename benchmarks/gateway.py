@@ -40,6 +40,12 @@ Gates (each raises, so CI fails loudly):
 4. **Progressive emission** — per request, streamed tile classes never
    decrease (structure before background).
 
+The headline (fair, preemptive) run carries a :mod:`repro.obs`
+``RecordingSink``: the payload's ``spans`` block decomposes the exact
+per-class p50/p99 requests into queued / executing / preempted cycles,
+and the run raises unless the stream's execution attribution reconciles
+*integer-exactly* with ``RoundClock.worked_total``.
+
 ``scripts/bench_diff.py`` additionally diffs the GOPS/W of every row
 against the committed baseline at the merge-base, keying gateway rows by
 (trace name, trace schema version) so a schema bump reads as a target
@@ -128,11 +134,16 @@ def _build_models(trace):
 
 
 def _replay_once(trace, models_bundle, *, policy, preemptive, shares,
-                 round_budget):
+                 round_budget, record_spans=False):
     from repro.serve import Gateway, LMAdapter, SegAdapter
     from repro.workload import lm_materializer, replay, seg_materializer
 
     lm_cfg, lm_params, seg_cfg, seg_params, plan = models_bundle
+    sink = None
+    if record_spans:
+        from repro.obs import RecordingSink
+
+        sink = RecordingSink()
     gw = Gateway(
         [
             LMAdapter(lm_cfg, lm_params, batch=LM_BATCH, max_seq=LM_MAX_SEQ,
@@ -143,6 +154,7 @@ def _replay_once(trace, models_bundle, *, policy, preemptive, shares,
         policy=policy,
         round_budget=round_budget,
         shares=shares,
+        sink=sink,
     )
     t0 = time.perf_counter()
     summary = replay.replay(
@@ -167,6 +179,21 @@ def _replay_once(trace, models_bundle, *, policy, preemptive, shares,
         lm=[list(g.handle.out) for g in gw.requests if g.kind == "lm"],
         seg=[g.handle.result.logits for g in gw.requests if g.kind == "seg"],
     )
+    if record_spans:
+        from repro.obs import assemble, breakdown, reconcile
+
+        rec = reconcile(sink.events, [gw.round_clock])
+        if not rec["holds"]:
+            raise RuntimeError(
+                f"span execution attribution does not reconcile with the "
+                f"round clock: {rec['total_exec']} exec-event cycles vs "
+                f"{rec['total_worked']} worked cycles"
+            )
+        summary["spans"] = dict(
+            per_class=breakdown(assemble(sink.events)),
+            reconcile=rec,
+            events=len(sink.events),
+        )
     return summary, outputs
 
 
@@ -196,6 +223,11 @@ def run(*, trace_path: str = TRACE_PATH,
         summary, outs = _replay_once(
             trace, models_bundle, policy=policy, preemptive=preemptive,
             shares=shares, round_budget=round_budget,
+            # telemetry rides the headline run only: the span breakdown in
+            # the payload decomposes *that* configuration's p50/p99, and
+            # the in-run reconcile raise is the bench's integer-exactness
+            # gate (exec attribution == RoundClock.worked_total)
+            record_spans=(policy, preemptive) == ("fair", True),
         )
         summaries[(policy, preemptive)] = summary
         outputs[(policy, preemptive)] = outs
@@ -310,6 +342,7 @@ def run(*, trace_path: str = TRACE_PATH,
             trace=pre["trace"],
             round_budget=round_budget,
             shares=shares,
+            spans=pre["spans"],
             rows=payload_rows,
             gate=dict(
                 preemption=dict(

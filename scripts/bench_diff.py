@@ -243,6 +243,19 @@ def headline_metrics(payload: dict) -> dict | None:
             pc = row.get("per_class", {})
             if "interactive" in pc:
                 out["interactive_p99_ms"] = pc["interactive"].get("p99_ms")
+            # span-breakdown headline: where did the p99 request's time
+            # go (queued / executing / preempted), from the event-bus
+            # span block instrumented payloads carry (repro.obs.spans)
+            p99 = (
+                payload.get("spans", {})
+                .get("per_class", {})
+                .get("interactive", {})
+                .get("p99")
+            )
+            if p99:
+                out["p99_queued_ms"] = p99.get("queued_ms")
+                out["p99_exec_ms"] = p99.get("exec_ms")
+                out["p99_preempted_ms"] = p99.get("preempted_ms")
             return out
     if bench == "fabric":
         trs = payload.get("traces", {})

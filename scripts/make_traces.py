@@ -67,6 +67,7 @@ def gateway_burst(seed: int = 20260729):
             "fair-vs-fifo gate workload of benchmarks/gateway.py"
         ),
         meta=dict(
+            source="generated",
             round_budget=800_000,
             # interactive gets headroom over its ~0.33 offered load (the
             # latency class must not be share-saturated, or queueing —
@@ -120,6 +121,7 @@ def gateway_burst_scaled(factor: int, seed: int = 20260729):
             f"benchmarks/fabric.py"
         ),
         meta=dict(
+            source="generated",
             round_budget=800_000,
             shares=dict(interactive=0.4, batch=0.3, seg=0.3),
             scale_factor=factor,

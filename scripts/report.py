@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Regenerate the ledger report from committed artifacts — no benches
+are re-run.
+
+Reads ``BENCH_LEDGER.jsonl`` (the per-revision headline ledger
+``scripts/bench_diff.py --ledger`` maintains) and the ``BENCH_*.json``
+payloads, and renders GOPS/W + latency trend tables per bench plus the
+span-breakdown tables (queued / executing / preempted decomposition of
+the exact p50/p99 requests) carried by instrumented bench payloads.
+
+    python scripts/report.py [--ledger BENCH_LEDGER.jsonl]
+                             [--benches BENCH_*.json ...]
+                             [--out REPORT.md] [--json report.json]
+
+Exit status: 0 when a report was produced (even if sections are empty —
+a fresh repo has no ledger yet), 1 when *none* of the inputs exist.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+
+from repro.obs.report import build_report  # noqa: E402
+
+DEFAULT_BENCHES = (
+    "BENCH_segserve.json",
+    "BENCH_autotune.json",
+    "BENCH_gateway.json",
+    "BENCH_fabric.json",
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ledger", default="BENCH_LEDGER.jsonl")
+    ap.add_argument("--benches", nargs="*", default=list(DEFAULT_BENCHES))
+    ap.add_argument("--out", default="REPORT.md",
+                    help="markdown report path")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="optional JSON twin of the report")
+    args = ap.parse_args(argv)
+
+    have_ledger = os.path.exists(args.ledger)
+    have_benches = [p for p in args.benches if os.path.exists(p)]
+    if not have_ledger and not have_benches:
+        print(f"report: no inputs found (ledger={args.ledger!r}, "
+              f"benches={list(args.benches)})", file=sys.stderr)
+        return 1
+
+    md, payload = build_report(args.ledger, args.benches)
+    with open(args.out, "w") as fh:
+        fh.write(md)
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    print(f"report: {payload['ledger_entries']} ledger entries, "
+          f"{len(have_benches)} bench payloads -> {args.out}"
+          + (f" + {args.json_out}" if args.json_out else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Cycle-exact telemetry over the serving stack.
+
+Everything in this package rides the *modeled* cycle clock
+(:mod:`repro.core.cycle_model` relation-(2) cycles) — no wall time
+anywhere — so a telemetry stream is exactly reproducible from the same
+seed and trace that produced the run.  Four pieces:
+
+:mod:`repro.obs.events`
+    The lossless structured event bus: scheduling-significant moments
+    (queue-enter, admission, quantum grants, preemption yields, steals,
+    forced escapes, swap holds, tile emissions, completions, per-request
+    execution attribution) stamped in modeled cycles, emitted by the
+    gateway, fabric, round clock and both engines behind a near-zero-cost
+    null sink.
+
+:mod:`repro.obs.spans`
+    Per-request span assembly from the event stream — each completed
+    request decomposed into queued / executing / preempted cycle
+    segments (integer-exact: the three sum to its latency by
+    construction) — plus exact-order-statistic latency breakdowns and
+    ledger reconciliation against :class:`~repro.serve.clock.RoundClock`
+    / :class:`~repro.serve.clock.FleetLedger` totals.
+
+:mod:`repro.obs.capture`
+    Record a live gateway/fabric's arrivals back into workload trace
+    schema v1, so a production-shaped run replays bit-identically in CI.
+
+:mod:`repro.obs.report`
+    The ledger report generator: GOPS/W + p99 trend tables from
+    ``BENCH_LEDGER.jsonl`` and span-breakdown tables from committed
+    ``BENCH_*.json`` artifacts — regenerated without re-running benches
+    (``scripts/report.py`` is the CLI).
+"""
+from .events import (  # noqa: F401
+    NULL_SINK,
+    Event,
+    MetricsSink,
+    NullSink,
+    RecordingSink,
+    ShardSink,
+    TeeSink,
+    payload_spec,
+)
+from .spans import Span, assemble, breakdown, reconcile  # noqa: F401

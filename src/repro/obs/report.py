@@ -1,0 +1,217 @@
+"""Ledger report generator: trend + breakdown tables from committed
+artifacts, no re-running of benches.
+
+Inputs are the repo's own committed CI artifacts:
+
+``BENCH_LEDGER.jsonl``
+    one datapoint per revision (``scripts/bench_diff.py --ledger``):
+    each bench's headline GOPS/W, certificate and extra headline metrics
+    keyed by revision + committer date.  The report renders one trend
+    table per bench — GOPS/W with per-revision deltas, and the latency
+    headline (p99) where the bench carries one.
+
+``BENCH_*.json``
+    the per-bench payloads.  The gateway payload (and, when present,
+    the fabric payload) carries a ``spans`` block — per-class
+    exact-order-statistic latency breakdowns assembled from the event
+    bus (:mod:`repro.obs.spans`) — rendered as "the p99 request spent X
+    queued / Y executing / Z preempted" tables, plus the integer
+    reconciliation verdict against the cycle ledgers.
+
+Output is markdown (the CI artifact) and a JSON twin for programmatic
+consumers.  ``scripts/report.py`` is the CLI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def read_ledger(path) -> list[dict]:
+    """Parse a ``BENCH_LEDGER.jsonl`` (newest entry last, as appended)."""
+    entries: list[dict] = []
+    if not os.path.exists(path):
+        return entries
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                entries.append(json.loads(line))
+    return entries
+
+
+def read_benches(paths) -> dict[str, dict]:
+    """Load BENCH payloads present on disk, keyed by their bench name."""
+    out: dict[str, dict] = {}
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        with open(p) as fh:
+            payload = json.load(fh)
+        out[str(payload.get("bench", os.path.basename(p)))] = payload
+    return out
+
+
+def trend(entries) -> dict[str, list[dict]]:
+    """Pivot ledger entries into per-bench revision series (entry order
+    preserved — the ledger is append-ordered, oldest first)."""
+    series: dict[str, list[dict]] = {}
+    for e in entries:
+        for bench, h in e.get("benches", {}).items():
+            row = dict(
+                revision=str(e.get("revision", "?"))[:12],
+                date=str(e.get("date", ""))[:10],
+            )
+            row.update(h)
+            series.setdefault(bench, []).append(row)
+    return series
+
+
+_LATENCY_KEYS = ("interactive_p99_ms", "seg_p99_ms")
+
+
+def _fmt(v, nd=3) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        return f"{v:.{nd}f}"
+    return str(v)
+
+
+def trend_tables(series: dict[str, list[dict]]) -> list[str]:
+    """One markdown trend table per bench, GOPS/W deltas vs the previous
+    ledger entry for the same bench."""
+    out: list[str] = []
+    for bench in sorted(series):
+        rows = series[bench]
+        lat_keys = [
+            k for k in _LATENCY_KEYS if any(k in r for r in rows)
+        ]
+        head = ["revision", "date", "gops_w", "Δ%"]
+        head += [k for k in lat_keys] + ["cert", "target"]
+        lines = [
+            f"### {bench}",
+            "",
+            "| " + " | ".join(head) + " |",
+            "|" + "|".join("---" for _ in head) + "|",
+        ]
+        prev = None
+        for r in rows:
+            gw = r.get("gops_w")
+            if prev not in (None, 0) and gw is not None:
+                delta = f"{(gw - prev) / prev * 100:+.2f}"
+            else:
+                delta = "—"
+            cells = [
+                r["revision"], r["date"], _fmt(gw), delta,
+                *[_fmt(r.get(k)) for k in lat_keys],
+                _fmt(r.get("cert"), 4), _fmt(r.get("target")),
+            ]
+            lines.append("| " + " | ".join(cells) + " |")
+            prev = gw if gw is not None else prev
+        out.append("\n".join(lines))
+    return out
+
+
+def span_tables(payload: dict) -> str | None:
+    """Render a BENCH payload's ``spans`` block (if any): per-class p50 /
+    p99 queued-vs-executing-vs-preempted decompositions plus the ledger
+    reconciliation verdict."""
+    spans = payload.get("spans")
+    if not spans:
+        return None
+    per_class = spans.get("per_class", {})
+    head = ["class", "n", "pct", "total_ms",
+            "queued_ms", "exec_ms", "preempted_ms", "rid"]
+    lines = [
+        "| " + " | ".join(head) + " |",
+        "|" + "|".join("---" for _ in head) + "|",
+    ]
+    for qos in sorted(per_class):
+        entry = per_class[qos]
+        for key in sorted(k for k in entry if k.startswith("p")
+                          and isinstance(entry[k], dict)):
+            d = entry[key]
+            lines.append(
+                "| " + " | ".join([
+                    qos, str(entry.get("n", "—")), key,
+                    _fmt(d.get("total_ms")), _fmt(d.get("queued_ms")),
+                    _fmt(d.get("exec_ms")), _fmt(d.get("preempted_ms")),
+                    str(d.get("rid", "—")),
+                ]) + " |"
+            )
+    rec = spans.get("reconcile")
+    if rec is not None:
+        verdict = "holds" if rec.get("holds") else "**VIOLATED**"
+        lines.append("")
+        lines.append(
+            f"Ledger reconciliation: {verdict} — "
+            f"Σ exec-attribution = {rec.get('total_exec')} cycles vs "
+            f"worked_total = {rec.get('total_worked')} cycles."
+        )
+    return "\n".join(lines)
+
+
+def build_report(ledger_path, bench_paths) -> tuple[str, dict]:
+    """Assemble the full report; returns ``(markdown, json_payload)``."""
+    entries = read_ledger(ledger_path)
+    series = trend(entries)
+    benches = read_benches(bench_paths)
+
+    md: list[str] = ["# Bench ledger report", ""]
+    md.append(
+        f"Regenerated from committed artifacts: {len(entries)} ledger "
+        f"entries ({os.path.basename(str(ledger_path))}), "
+        f"{len(benches)} bench payloads. No benches were re-run."
+    )
+    md.append("")
+    if series:
+        md.append("## Trends (GOPS/W + latency headlines per revision)")
+        md.append("")
+        for table in trend_tables(series):
+            md.append(table)
+            md.append("")
+    else:
+        md.append("_No ledger entries found — trend section empty._")
+        md.append("")
+
+    span_sections = {}
+    for bench in sorted(benches):
+        table = span_tables(benches[bench])
+        if table is None:
+            continue
+        span_sections[bench] = benches[bench].get("spans")
+        md.append(f"## Span breakdown — {bench}")
+        md.append("")
+        md.append(
+            "Exact-order-statistic requests (the actual p50/p99 request, "
+            "not an interpolation), decomposed into queued / executing / "
+            "preempted modeled cycles:"
+        )
+        md.append("")
+        md.append(table)
+        md.append("")
+
+    payload = dict(
+        schema="repro.obs.report",
+        version=1,
+        ledger_entries=len(entries),
+        trends=series,
+        benches={
+            b: dict(
+                bench=b,
+                gate_holds=_gate_holds(p),
+                spans=span_sections.get(b),
+            )
+            for b, p in sorted(benches.items())
+        },
+    )
+    return "\n".join(md) + "\n", payload
+
+
+def _gate_holds(payload: dict):
+    gate = payload.get("gate")
+    if not isinstance(gate, dict):
+        return None
+    holds = gate.get("holds")
+    return bool(holds) if holds is not None else None

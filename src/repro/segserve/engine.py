@@ -35,6 +35,7 @@ import numpy as np
 from repro.core import cycle_model as cm
 from repro.core.plane_schedule import PlaneSchedule
 from repro.models import unet
+from repro.obs.events import NULL_SINK, Event
 from repro.serve.queue import FifoQueue, SlotTable
 
 from . import adaptive, tiling
@@ -255,6 +256,10 @@ class SegEngine:
         self._fwd = _shared_forward(plan is not None and quantized)
         self._cfg_for_class: dict[int, unet.UNetConfig] = {}
         self._next_rid = 0
+        # telemetry (repro.obs.events): engine-local micro-batch records,
+        # sequence-stamped — the gateway owns the cycle-exact account
+        self.obs = NULL_SINK
+        self._obs_seq = 0
 
     # ----------------------------------------------------------- schedules
 
@@ -440,6 +445,11 @@ class SegEngine:
                     done=req.done, request=req,
                 )
             )
+        if self.obs.enabled:
+            self._obs_seq += 1
+            self.obs.emit(Event(self._obs_seq, "seg-batch", dict(
+                klass=int(k), tiles=len(taken), cycles=int(cyc * len(taken)),
+            )))
         return events
 
     def _finish(self, req: SegRequest) -> None:

@@ -32,6 +32,26 @@ Two layers:
 """
 from __future__ import annotations
 
+import math
+
+
+def exact_percentile(values, pct: float):
+    """Exact order statistic: the smallest observed value with at least
+    ``ceil(pct/100 * n)`` observations at or below it.
+
+    The stack's single percentile semantics (gateway ``stats()``, fabric
+    ``stats()``, replay summaries, span breakdowns): a p99 is always an
+    *actual observed latency* — never ``np.percentile``'s interpolation
+    between two observations, which on the small per-class samples the
+    bench gates compare can manufacture values nobody experienced.
+    Returns ``None`` on an empty sample.
+    """
+    vals = sorted(values)
+    if not vals:
+        return None
+    k = math.ceil(pct / 100.0 * len(vals))
+    return vals[min(max(k, 1), len(vals)) - 1]
+
 
 class RoundClock:
     """Modeled cycle clock + per-round ledger for one scheduler.
@@ -53,6 +73,7 @@ class RoundClock:
         "cycles", "rounds", "forced",
         "worked_total", "class_worked_total",
         "round_spent", "round_worked", "round_class_worked",
+        "obs",
     )
 
     def __init__(self) -> None:
@@ -64,6 +85,9 @@ class RoundClock:
         self.round_spent = 0  # intra-round modeled time (work + idle)
         self.round_worked = 0  # cycles actually consumed this round
         self.round_class_worked: dict[str, int] = {}
+        # optional telemetry sink (repro.obs.events); None keeps this
+        # module dependency-free and the hot path a single None check
+        self.obs = None
 
     # ------------------------------------------------------------- rounds
 
@@ -99,6 +123,14 @@ class RoundClock:
         self.round_spent = max(self.round_spent, int(limit))
 
     def end_round(self, round_budget: int) -> None:
+        if self.obs is not None:
+            from repro.obs.events import Event
+
+            self.obs.emit(Event(
+                self.cycles + int(round_budget), "round",
+                dict(round=self.rounds, spent=self.round_spent,
+                     worked=self.round_worked),
+            ))
         self.cycles += int(round_budget)
         self.rounds += 1
 

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.events import NULL_SINK, Event
+
 from . import serve_step as ss
 from .queue import FifoQueue, SlotTable
 
@@ -156,6 +158,12 @@ class Engine:
         self.slots: SlotTable[Request] = SlotTable(batch)
         self.lengths = np.zeros(batch, np.int32)
         self._vector_index = cfg.family in VECTOR_INDEX_FAMILIES
+        # telemetry (repro.obs.events): engine-local micro-step records.
+        # The engine has no view of the modeled clock, so events are
+        # sequence-stamped (monotonic per engine) — the gateway's exec
+        # attribution carries the cycle-exact account
+        self.obs = NULL_SINK
+        self._obs_seq = 0
 
     def _index(self, slot: int):
         """The cache index argument for a call driven by ``slot``: the
@@ -206,6 +214,11 @@ class Engine:
             req.prefill_pos += 1
         if n and req.ready:
             req._last_logits = np.asarray(logits[slot, -1])  # type: ignore[attr-defined]
+        if n and self.obs.enabled:
+            self._obs_seq += 1
+            self.obs.emit(Event(self._obs_seq, "lm-prefill", dict(
+                rid=req.rid, tokens=int(n), slot=int(slot),
+            )))
         return n
 
     def admit(self, req: Request) -> bool:
@@ -265,6 +278,11 @@ class Engine:
                 req.done = True
                 self.slots.release(i)
                 completed.append(req)
+        if self.obs.enabled:
+            self._obs_seq += 1
+            self.obs.emit(Event(self._obs_seq, "lm-step", dict(
+                slots=len(active), completed=len(completed),
+            )))
         return completed
 
     def run(self, requests: list[Request]) -> list[Request]:

@@ -46,9 +46,10 @@ from __future__ import annotations
 from typing import Any
 
 from repro.core import cycle_model as cm
+from repro.obs.events import NULL_SINK, Event, ShardSink
 from repro.workload.arrivals import counter_uniform
 
-from .clock import FleetLedger
+from .clock import FleetLedger, exact_percentile
 
 ROUTERS = ("class", "p2c", "deficit")
 
@@ -64,10 +65,15 @@ class Fabric:
       steal: move queued requests from backlogged to idle shards at
         round boundaries.
       steal_batch: max requests moved per thief per round.
+      sink: optional telemetry sink (:mod:`repro.obs.events`).  The
+        fabric emits its own routing/steal events and arms every shard
+        through a :class:`~repro.obs.events.ShardSink`, so the combined
+        stream carries a ``shard`` tag on every shard-side event.
+        Default: the null sink (no events, no behavior change).
     """
 
     def __init__(self, shards, *, router: str = "p2c", seed: int = 0,
-                 steal: bool = True, steal_batch: int = 4):
+                 steal: bool = True, steal_batch: int = 4, sink=None):
         shards = list(shards)
         if not shards:
             raise ValueError("fabric needs at least one shard")
@@ -109,6 +115,24 @@ class Fabric:
         self.stolen = 0  # requests moved by work stealing (lifetime)
         self.stolen_from = [0] * n
         self.stolen_to = [0] * n
+        self._obs = NULL_SINK
+        self._obs_on = False
+        self.set_sink(sink)
+
+    # ---------------------------------------------------------- telemetry
+
+    @property
+    def sink(self):
+        return self._obs
+
+    def set_sink(self, sink) -> None:
+        """Arm (or disarm, with ``None``) one telemetry sink fleet-wide:
+        the fabric's own route/steal events plus every shard's stream,
+        shard-tagged through :class:`~repro.obs.events.ShardSink`."""
+        self._obs = NULL_SINK if sink is None else sink
+        self._obs_on = bool(getattr(self._obs, "enabled", True))
+        for i, g in enumerate(self.shards):
+            g.set_sink(ShardSink(self._obs, i) if self._obs_on else None)
 
     # ------------------------------------------------- replay duck-typing
 
@@ -204,6 +228,10 @@ class Fabric:
             moved = donor.export_queued(take)
             thief.import_queued(moved)
             est_moved = sum(g.est_cycles for g in moved)
+            if self._obs_on and moved:
+                self._obs.emit(Event(self.clock, "steal", dict(
+                    src=d, dst=t, n=len(moved), est=est_moved,
+                )))
             self._outstanding[d] = max(self._outstanding[d] - est_moved, 0)
             self._outstanding[t] += est_moved
             self.stolen += len(moved)
@@ -226,6 +254,10 @@ class Fabric:
             self.dispatched[s] += 1
             self._outstanding[s] += est
             by_shard[s].append((cyc, kind, prepared, kw))
+            if self._obs_on:
+                self._obs.emit(Event(int(cyc), "route", dict(
+                    kind=kind, qos=qos, dst=s, est=est,
+                )))
         if self.steal:
             self._steal_pass()
         for s, gw in enumerate(self.shards):
@@ -281,9 +313,9 @@ class Fabric:
 
         GOPS/W is fleet-honest: total ops over the lock-step elapsed
         time, against N chips' worth of the paper's modeled power.
+        Percentiles are exact order statistics, matching the single
+        gateway's ``stats()`` semantics.
         """
-        import numpy as np
-
         classes = list(self.shares)
         for g in self.requests:
             if g.qos not in classes:
@@ -294,11 +326,13 @@ class Fabric:
             if not of_c and c not in self.adapters:
                 continue
             lats = [g.latency_ms for g in of_c if g.done]
+            p50 = exact_percentile(lats, 50)
+            p99 = exact_percentile(lats, 99)
             per_class[c] = dict(
                 n=len(of_c),
                 completed=len(lats),
-                p50_ms=float(np.percentile(lats, 50)) if lats else None,
-                p99_ms=float(np.percentile(lats, 99)) if lats else None,
+                p50_ms=None if p50 is None else float(p50),
+                p99_ms=None if p99 is None else float(p99),
                 max_ms=float(max(lats)) if lats else None,
             )
         add = self.additivity()
@@ -327,6 +361,18 @@ class Fabric:
             stolen=self.stolen,
             stolen_from=list(self.stolen_from),
             stolen_to=list(self.stolen_to),
+            # fleet totals are the exact sums of the per_shard addends
+            # below — same additivity discipline the ledger is gated on
+            tile_events_seen=sum(
+                g._tile_events_seen for g in self.shards
+            ),
+            tile_events_kept=sum(
+                len(g.tile_events) for g in self.shards
+            ),
+            tile_events_dropped=sum(
+                g._tile_events_seen - len(g.tile_events)
+                for g in self.shards
+            ),
             per_shard=[
                 dict(
                     rounds=g.rounds,
@@ -335,6 +381,10 @@ class Fabric:
                     ops=self.ledger.ops[s],
                     worked=self.ledger.worked[s],
                     forced=g.forced,
+                    tile_events_seen=g._tile_events_seen,
+                    tile_events_kept=len(g.tile_events),
+                    tile_events_dropped=g._tile_events_seen
+                    - len(g.tile_events),
                 )
                 for s, g in enumerate(self.shards)
             ],

@@ -111,8 +111,9 @@ from dataclasses import dataclass
 from typing import Any
 
 from repro.core import cycle_model as cm
+from repro.obs.events import NULL_SINK, Event, payload_spec
 
-from .clock import RoundClock
+from .clock import RoundClock, exact_percentile
 from .queue import FifoQueue
 
 POLICIES = ("fifo", "fair", "edf")
@@ -258,6 +259,11 @@ class LMAdapter:
     """
 
     kind = "lm"
+    # armed by Gateway.set_sink: when True, work() appends per-request
+    # (rid, qos, cycles, offset) execution-attribution records to
+    # exec_log for the gateway to drain into the event bus
+    obs_enabled = False
+    obs_sink = None
 
     def __init__(self, cfg, params, *, batch: int, max_seq: int,
                  plan=None, extras=None, preemptive: bool = True):
@@ -269,6 +275,7 @@ class LMAdapter:
         self._extras = extras
         self.preemptive = bool(preemptive)
         self.fallback_reason: str | None = None
+        self.exec_log: list[tuple] = []
         if plan is not None:
             from repro.autotune.api import apply_plan_lm
 
@@ -288,6 +295,7 @@ class LMAdapter:
             cfg, self.params, batch=self._batch, max_seq=self._max_seq,
             extras=self._extras,
         )
+        self.engine.obs = self.obs_sink or NULL_SINK
         schedule = cfg.quant.plane_schedule
         price_kw = dict(
             n_heads=cfg.n_heads, head_dim=cfg.hd, n_kv_heads=cfg.n_kv_heads,
@@ -410,6 +418,9 @@ class LMAdapter:
                 self.engine.prefill(h, int(n))
                 consumed += n * sc
                 self.total_ops += n * self._step_ops
+                if self.obs_enabled:
+                    self.exec_log.append((greq.rid, greq.qos, n * sc,
+                                          consumed))
                 if h.prefill_remaining:
                     break  # budget exhausted mid-prompt
         # 2. decode steps — class-scoped under the preemptive path *when
@@ -440,6 +451,13 @@ class LMAdapter:
             )
             consumed += cost
             self.total_ops += self._step_ops * len(decoding)
+            if self.obs_enabled:
+                # per-slot attribution: each decoding request owns one
+                # step price, whichever class invoked the batch step
+                for _, r in decoding:
+                    g2 = self._inflight.get(id(r))
+                    if g2 is not None:
+                        self.exec_log.append((g2.rid, g2.qos, sc, consumed))
             # every request that finished on this decode step finished at
             # *this* step's offset, not at the end of the whole chunk
             completed.extend(
@@ -471,6 +489,9 @@ class SegAdapter:
     """
 
     kind = "seg"
+    # armed by Gateway.set_sink (see LMAdapter.obs_enabled)
+    obs_enabled = False
+    obs_sink = None
 
     def __init__(self, cfg, params, *, plan=None, preemptive: bool = True,
                  **engine_kw):
@@ -480,6 +501,7 @@ class SegAdapter:
         self._engine_kw = dict(engine_kw)
         self.preemptive = bool(preemptive)
         self.fallback_reason: str | None = None
+        self.exec_log: list[tuple] = []
         self._build(cfg, plan)
         self._inflight: dict[int, GatewayRequest] = {}
         self.total_ops = 0
@@ -493,6 +515,7 @@ class SegAdapter:
             cfg = apply_plan(cfg, plan)
         self.cfg = cfg
         self.engine = SegEngine(cfg, self.params, plan=plan, **self._engine_kw)
+        self.engine.obs = self.obs_sink or NULL_SINK
         self._base_planes = tuple(self.engine._class_planes(0))
 
     # -- plan invalidation / hot reload
@@ -590,6 +613,11 @@ class SegAdapter:
             evs = self.engine.step(group)
             for ev in evs:
                 consumed += ev.cycles
+                if self.obs_enabled:
+                    g2 = self._inflight.get(ev.rid)
+                    if g2 is not None:
+                        self.exec_log.append((g2.rid, g2.qos, ev.cycles,
+                                              consumed))
                 if ev.done:
                     greq = self._inflight.pop(ev.rid, None)
                     if greq is not None:
@@ -631,6 +659,14 @@ class Gateway:
         retains (a bounded deque — the oldest drop off as new ones land).
         ``on_event`` stays the lossless path; dropped-event counts surface
         in ``stats()['tile_events_dropped']``.
+      sink: optional telemetry sink (:mod:`repro.obs.events`): every
+        scheduling-significant moment — queue-enter, admission, quantum
+        grants, preemption yields, forced escapes, swap holds, per-request
+        execution attribution, tile emissions, completions, round closes —
+        is emitted as a cycle-stamped :class:`~repro.obs.events.Event`.
+        Default is the null sink: no events are built and observable
+        behavior (scheduling, stats, bench numbers) is bit-identical to an
+        uninstrumented run.  Swap sinks later with :meth:`set_sink`.
     """
 
     def __init__(
@@ -644,6 +680,7 @@ class Gateway:
         deadline_factor: float = 4.0,
         on_event=None,
         max_kept_events: int = 100_000,
+        sink=None,
     ):
         policy = _POLICY_ALIASES.get(policy, policy)
         if policy not in POLICIES:
@@ -693,6 +730,9 @@ class Gateway:
         self._pending_swap: dict[str, Any] = {}
         self.plan_swaps: list[dict] = []  # installed hot-reloads
         self._next_rid = 0
+        self._obs = NULL_SINK
+        self._obs_on = False
+        self.set_sink(sink)
 
     # Historical surface: ``gw.clock`` / ``gw.rounds`` / ``gw.forced`` were
     # plain counters before the RoundClock extraction; every test, bench
@@ -725,6 +765,39 @@ class Gateway:
             class_worked=dict(self._clock.class_worked_total),
         )
 
+    # ---------------------------------------------------------- telemetry
+
+    @property
+    def sink(self):
+        """The armed telemetry sink (:data:`~repro.obs.events.NULL_SINK`
+        when observation is off)."""
+        return self._obs
+
+    def set_sink(self, sink) -> None:
+        """Arm (or disarm, with ``None``) the telemetry sink.
+
+        Arms the whole stack in one call: the gateway's own emission
+        points, the :class:`~repro.serve.clock.RoundClock` round-close
+        events, each adapter's execution-attribution log
+        (``adapter.obs_enabled`` / ``adapter.exec_log``), and — for
+        adapters that own an engine — the engine's sequence-stamped
+        micro-step records.  Adapters without the attribute surface
+        (synthetic test adapters) degrade gracefully: their per-request
+        attribution is simply absent from the stream.
+        """
+        self._obs = NULL_SINK if sink is None else sink
+        self._obs_on = bool(getattr(self._obs, "enabled", True))
+        self._clock.obs = self._obs if self._obs_on else None
+        for a in self.adapters.values():
+            try:
+                a.obs_enabled = self._obs_on
+                a.obs_sink = self._obs if self._obs_on else None
+            except AttributeError:
+                continue
+            eng = getattr(a, "engine", None)
+            if eng is not None and hasattr(eng, "obs"):
+                eng.obs = self._obs if self._obs_on else NULL_SINK
+
     # ------------------------------------------------------------- submit
 
     def submit(self, kind: str, payload, *, qos: str | None = None,
@@ -754,6 +827,10 @@ class Gateway:
         _check_plan(adapter, self.on_stale)
         rid = self._next_rid
         self._next_rid += 1
+        # the raw-payload spec must be read *before* prepare (preparation
+        # is lossy) — it is what obs.capture rebuilds traces from
+        spec = payload_spec(kind, payload, prepare_kw) if self._obs_on \
+            else None
         payload = adapter.prepare(payload, rid=rid, **prepare_kw)
         est = int(adapter.estimate_cycles(payload))
         arrival = self.clock if arrival_cycle is None else int(arrival_cycle)
@@ -768,6 +845,11 @@ class Gateway:
         )
         self.queue.push(greq)
         self.requests.append(greq)
+        if self._obs_on:
+            self._obs.emit(Event(arrival, "submit", dict(
+                rid=rid, kind=kind, qos=qos, est=est, deadline=deadline,
+                spec=spec,
+            )))
         return greq
 
     # ------------------------------------------------------ work stealing
@@ -789,6 +871,10 @@ class Gateway:
             self.requests = [
                 g for g in self.requests if id(g) not in gone
             ]
+            if self._obs_on:
+                for g in out:
+                    self._obs.emit(Event(self.clock, "export",
+                                         dict(rid=g.rid, qos=g.qos)))
         return out
 
     def import_queued(self, greqs) -> None:
@@ -815,6 +901,13 @@ class Gateway:
             self._next_rid += 1
             self.queue.push(g)
             self.requests.append(g)
+            if self._obs_on:
+                # span assembly treats an import as the (re-keyed)
+                # request's queue-enter: the original arrival travels
+                self._obs.emit(Event(self.clock, "import", dict(
+                    rid=g.rid, kind=g.kind, qos=g.qos, arrival=g.arrival,
+                    est=g.est_cycles, deadline=g.deadline,
+                )))
 
     # --------------------------------------------------------- hot reload
 
@@ -844,6 +937,10 @@ class Gateway:
                 f"{served_fp}"
             )
         self._pending_swap[kind] = plan
+        if self._obs_on:
+            self._obs.emit(Event(self.clock, "swap-hold", dict(
+                kind=kind, fingerprint=plan_fp,
+            )))
         self._install_pending_swaps()
 
     def _install_pending_swaps(self) -> None:
@@ -859,6 +956,15 @@ class Gateway:
                 dict(kind=kind, round=self.rounds,
                      fingerprint=plan.fingerprint)
             )
+            if self._obs_on:
+                # install_plan rebuilt the engine — re-arm its sink
+                eng = getattr(adapter, "engine", None)
+                if eng is not None and hasattr(eng, "obs"):
+                    eng.obs = self._obs
+                self._obs.emit(Event(self.clock, "swap-inst", dict(
+                    kind=kind, round=self.rounds,
+                    fingerprint=plan.fingerprint,
+                )))
 
     # ---------------------------------------------------------- admission
 
@@ -875,6 +981,11 @@ class Gateway:
         greq.admitted = self.clock
         greq.admitted_round = self.rounds
         self._live[greq.rid] = greq
+        if self._obs_on:
+            self._obs.emit(Event(self.clock, "admit", dict(
+                rid=greq.rid, kind=greq.kind, qos=greq.qos,
+                charged=int(charged),
+            )))
         if charged:
             self._admit_charges[greq.qos] = (
                 self._admit_charges.get(greq.qos, 0) + int(charged)
@@ -969,6 +1080,19 @@ class Gateway:
             soft_limit=None if soft is None else int(soft),
         )
         self._clock.record_work(consumed, qos)
+        if self._obs_on:
+            # drain the adapter's execution-attribution log: each entry is
+            # (rid, qos, cycles, offset-in-call), stamped like completions
+            # so Σ exec cycles reconciles with worked_total exactly
+            log = getattr(adapter, "exec_log", None)
+            if log:
+                for rid, equos, cyc, off in log:
+                    self._obs.emit(Event(
+                        self.clock + min(base + off, self.round_budget),
+                        "exec",
+                        dict(rid=rid, kind=kind, qos=equos, cycles=cyc),
+                    ))
+                log.clear()
         prev_off = 0
         for item in completed:
             # protocol v3: (greq, offset) — stamp each completion at its
@@ -995,6 +1119,11 @@ class Gateway:
             greq.finished = stamp
             greq.finished_round = self.rounds
             self._live.pop(greq.rid, None)
+            if self._obs_on:
+                self._obs.emit(Event(stamp, "complete", dict(
+                    rid=greq.rid, kind=greq.kind, qos=greq.qos,
+                    latency=greq.latency_cycles,
+                )))
             # the result lives on greq.handle; drop the input payload so a
             # long-running gateway does not pin every served image/prompt
             greq.payload = None
@@ -1003,6 +1132,14 @@ class Gateway:
             self._tile_events_seen += 1
             if self.on_event is not None:
                 self.on_event(ev)
+            if self._obs_on:
+                self._obs.emit(Event(
+                    self.clock + min(self._clock.round_spent,
+                                     self.round_budget),
+                    "tile",
+                    dict(rid=ev.rid, klass=ev.klass, cycles=ev.cycles,
+                         tile=ev.tile, done=bool(ev.done)),
+                ))
         return consumed
 
     def _work_class(self, c: str, budget: float, force: bool = False,
@@ -1023,6 +1160,17 @@ class Gateway:
                 used_total += used
                 if used:
                     force = False
+        if self._obs_on and used_total < budget and \
+                self._class_has_work(c):
+            # the preemption point: the class stopped with work pending
+            # and budget in hand (next step unaffordable, or a mid-round
+            # segment boundary) — its quantum carries to the next round
+            self._obs.emit(Event(
+                self.clock + min(self._clock.round_spent,
+                                 self.round_budget),
+                "preempt",
+                dict(qos=c, used=used_total, budget=int(budget)),
+            ))
         return used_total
 
     def _apply_admit_charges(self) -> None:
@@ -1044,6 +1192,11 @@ class Gateway:
             if self._class_has_work(c) or self._deficit[c] < 0:
                 self._deficit[c] += share * self.round_budget
                 self._granted.add(c)
+                if self._obs_on:
+                    self._obs.emit(Event(self.clock, "grant", dict(
+                        qos=c, quantum=share * self.round_budget,
+                        deficit=self._deficit[c],
+                    )))
             else:
                 self._deficit[c] = 0.0  # no banking while idle
 
@@ -1059,6 +1212,12 @@ class Gateway:
             if c not in self._granted and self._class_has_work(c):
                 self._deficit[c] += share * remaining
                 self._granted.add(c)
+                if self._obs_on:
+                    self._obs.emit(Event(
+                        self.clock + self._clock.round_spent, "grant",
+                        dict(qos=c, quantum=share * remaining,
+                             deficit=self._deficit[c], midround=True),
+                    ))
 
     def _execute(self, limit: float) -> None:
         """Spend modeled cycles until the round's intra-round clock
@@ -1167,9 +1326,15 @@ class Gateway:
             ):
                 for c in self._class_order():
                     if self._class_has_work(c):
-                        if self._work_class(c, self.round_budget,
-                                            force=True):
+                        used = self._work_class(c, self.round_budget,
+                                                force=True)
+                        if used:
                             self._clock.forced += 1
+                            if self._obs_on:
+                                self._obs.emit(Event(
+                                    self.clock, "forced",
+                                    dict(qos=c, cycles=used),
+                                ))
                             return
             return
         for c in self._classes():
@@ -1184,6 +1349,9 @@ class Gateway:
             if used:
                 self._clock.forced += 1
                 self._deficit[c] = self._deficit.get(c, 0.0) - used
+                if self._obs_on:
+                    self._obs.emit(Event(self.clock, "forced",
+                                         dict(qos=c, cycles=used)))
             self._class_stalled[c] = 0
 
     # ------------------------------------------------------------- rounds
@@ -1253,9 +1421,10 @@ class Gateway:
 
     def stats(self) -> dict:
         """Per-class modeled-latency distribution + aggregate GOPS/W.
-        Classes are QoS labels (adapter kinds for unlabeled traffic)."""
-        import numpy as np
-
+        Classes are QoS labels (adapter kinds for unlabeled traffic).
+        Percentiles are exact order statistics
+        (:func:`~repro.serve.clock.exact_percentile`): every reported
+        p50/p99 is an actual observed latency, never an interpolation."""
         classes = list(self.shares)
         for g in self.requests:
             if g.qos not in classes:
@@ -1266,11 +1435,13 @@ class Gateway:
             if not of_c and c not in self.adapters:
                 continue
             lats = [g.latency_ms for g in of_c if g.done]
+            p50 = exact_percentile(lats, 50)
+            p99 = exact_percentile(lats, 99)
             per_class[c] = dict(
                 n=len(of_c),
                 completed=len(lats),
-                p50_ms=float(np.percentile(lats, 50)) if lats else None,
-                p99_ms=float(np.percentile(lats, 99)) if lats else None,
+                p50_ms=None if p50 is None else float(p50),
+                p99_ms=None if p99 is None else float(p99),
                 max_ms=float(max(lats)) if lats else None,
             )
         total_ops = sum(a.total_ops for a in self.adapters.values())

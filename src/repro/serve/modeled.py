@@ -66,6 +66,10 @@ class _ModeledBase:
 
     plan = None
     fallback_reason = None
+    # armed by Gateway.set_sink: when True, work() appends per-request
+    # (rid, qos, cycles, offset) execution-attribution records
+    obs_enabled = False
+    obs_sink = None
 
     def __init__(self, *, slots: int):
         if slots < 1:
@@ -74,6 +78,7 @@ class _ModeledBase:
         # admission order; gateway requests carry the jobs as handles
         self._order: list = []
         self.total_ops = 0
+        self.exec_log: list[tuple] = []
 
     def verify_info(self):
         return None  # no tuned plan — nothing to invalidate
@@ -174,6 +179,8 @@ class ModeledLMAdapter(_ModeledBase):
             job.prefill_remaining -= n
             consumed += n * sc
             self.total_ops += n * self._step_ops
+            if self.obs_enabled:
+                self.exec_log.append((greq.rid, greq.qos, n * sc, consumed))
             if job.prefill_remaining:
                 break  # budget exhausted mid-prompt
         # 2. batched decode: every ready matching job advances together
@@ -196,6 +203,8 @@ class ModeledLMAdapter(_ModeledBase):
             self.total_ops += self._step_ops * len(ready)
             for g in ready:
                 g.handle.decode_remaining -= 1
+                if self.obs_enabled:
+                    self.exec_log.append((g.rid, g.qos, sc, consumed))
                 if g.handle.done:
                     completed.append((g, consumed))
         done = {id(g) for g, _ in completed}
@@ -271,6 +280,8 @@ class ModeledSegAdapter(_ModeledBase):
                 job.tiles_remaining -= 1
                 consumed += tc
                 self.total_ops += self._tile_ops
+                if self.obs_enabled:
+                    self.exec_log.append((greq.rid, greq.qos, tc, consumed))
                 if job.done:
                     completed.append((greq, consumed))
             else:

@@ -85,6 +85,7 @@ def replay(
     materializers: dict,
     *,
     max_rounds: int = 100_000,
+    capture=None,
 ) -> dict:
     """Drive ``gateway`` through ``trace`` open-loop; returns the summary.
 
@@ -95,7 +96,19 @@ def replay(
     :func:`seg_materializer`; modeled adapters use
     :func:`repro.serve.modeled.modeled_materializer`).  Every QoS class
     the trace carries must be declared in the gateway's ``shares``.
+
+    ``capture`` (a :class:`repro.obs.capture.CaptureSink`) records the
+    replayed arrivals back into trace schema v1 as they happen — the
+    capture→replay round-trip.  It is armed *in addition to* any sink the
+    gateway already carries (teed), and the combined sink is left armed.
     """
+    if capture is not None:
+        from repro.obs.events import NULL_SINK, TeeSink
+
+        prior = getattr(gateway, "sink", NULL_SINK)
+        gateway.set_sink(
+            capture if prior is NULL_SINK else TeeSink([prior, capture])
+        )
     missing = set(trace.kinds) - set(gateway.adapters)
     if missing:
         raise ValueError(
@@ -133,8 +146,18 @@ def replay(
 
 
 def summarize(gateway, trace: Trace) -> dict:
-    """The replay summary in the shared bench-tracker schema."""
+    """The replay summary in the shared bench-tracker schema.
+
+    Percentiles inherit the stack-wide exact-order-statistic semantics
+    (:func:`repro.serve.clock.exact_percentile`) from ``gateway.stats()``;
+    the ``overall`` aggregate applies the same helper across every
+    completed request regardless of class."""
+    from repro.serve.clock import exact_percentile
+
     st = gateway.stats()
+    all_lats = [g.latency_ms for g in gateway.requests if g.done]
+    overall_p50 = exact_percentile(all_lats, 50)
+    overall_p99 = exact_percentile(all_lats, 99)
     rows = []
     for qos, pc in st["per_class"].items():
         if pc["n"] == 0 or not pc["completed"]:
@@ -164,6 +187,11 @@ def summarize(gateway, trace: Trace) -> dict:
         gops=st["gops"],
         gops_w=st["gops_w"],
         per_class=st["per_class"],
+        overall=dict(
+            completed=len(all_lats),
+            p50_ms=None if overall_p50 is None else float(overall_p50),
+            p99_ms=None if overall_p99 is None else float(overall_p99),
+        ),
         forced=st["forced"],
         rows=rows,
     )

@@ -30,6 +30,9 @@ class FakeAdapter:
     atomic loop (runs while ``consumed < budget``, overshooting by up to
     ``unit - 1``)."""
 
+    obs_enabled = False  # armed by Gateway.set_sink, like real adapters
+    obs_sink = None
+
     def __init__(self, kind, *, slots=2, unit=1_000, preemptive=True):
         self.kind = kind
         self.slots = slots
@@ -40,6 +43,7 @@ class FakeAdapter:
         self.total_ops = 0
         self.fallback_reason = None
         self.work_calls = []  # (budget, consumed, forced) audit trail
+        self.exec_log = []  # (rid, qos, cycles, offset) attribution
 
     def prepare(self, payload, *, rid):
         return int(payload)  # payload is the request's cycle cost
@@ -91,6 +95,10 @@ class FakeAdapter:
             self._remaining[rid] -= chunk
             consumed += chunk
             self.total_ops += chunk  # 1 op/cycle: GOPS plumbing stays live
+            if self.obs_enabled:
+                self.exec_log.append(
+                    (rid, self._inflight[rid].qos, chunk, consumed)
+                )
             if self._remaining[rid] == 0:
                 del self._remaining[rid]
                 # protocol v3: completion at its own micro-step's offset
