@@ -1,7 +1,7 @@
 """Benchmark harness — one section per paper table/claim.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay|fabric]
+        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay|fabric|capacity]
 
 Prints ``name,us_per_call,derived`` CSV rows.  The segserve, autotune,
 gateway and fabric sections also write machine-readable
@@ -13,7 +13,10 @@ which replays the committed canonical trace ``traces/gateway_burst.json``
 through ``repro.workload.replay``.  ``fabric`` replays the scaled
 ``gateway_burst_x10``/``_x100`` traces through a single modeled gateway
 and an N-shard sharded fabric (``repro.serve.Fabric``) and gates
-scale-out p99 behavior plus exact fleet-ledger additivity.
+scale-out p99 behavior plus exact fleet-ledger additivity.  ``capacity``
+is the SLO-driven fleet capacity planner: it streams a diurnal workload
+over a shard x router x policy x plan grid of modeled fabrics and writes
+the cost-per-SLO frontier to ``BENCH_capacity.json``.
 """
 from __future__ import annotations
 
@@ -91,6 +94,10 @@ def main() -> None:
         from benchmarks import fabric
 
         rows += fabric.run()
+    if args.section in ("all", "capacity"):
+        from benchmarks import capacity
+
+        rows += capacity.run()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

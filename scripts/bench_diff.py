@@ -57,6 +57,7 @@ DEFAULT_FILES = (
     "BENCH_autotune.json",
     "BENCH_gateway.json",
     "BENCH_fabric.json",
+    "BENCH_capacity.json",
 )
 
 
@@ -128,6 +129,20 @@ def comparable_rows(payload: dict):
             if "seg" in pc and pc["seg"].get("p99_ms") is not None:
                 metrics["minority_p99_ms"] = pc["seg"]["p99_ms"]
             yield f"run:{r['label']}", target, metrics
+        return
+    if bench == "capacity":
+        # comparable only on the identical sweep: the payload's ``key``
+        # encodes workload generator + seed + span + trace schema + the
+        # full grid, so any grid or workload change reads as a target
+        # change — skipped, never failed
+        target = payload.get("key")
+        for r in payload.get("rows", []):
+            metrics = dict(gops_w=r.get("gops_w"))
+            pc = r.get("per_class", {})
+            if "interactive" in pc and \
+                    pc["interactive"].get("p99_ms") is not None:
+                metrics["minority_p99_ms"] = pc["interactive"]["p99_ms"]
+            yield f"cap:{r['label']}", target, metrics
         return
     file_target = payload.get("target_rel_err")
     for r in payload.get("rows", []):
@@ -275,6 +290,28 @@ def headline_metrics(payload: dict) -> dict | None:
             if "seg" in pc:
                 out["seg_p99_ms"] = pc["seg"].get("p99_ms")
             return out
+    if bench == "capacity":
+        target = payload.get("key")
+        frontier = payload.get("frontier", [])
+        # the flagship operating point: tuned plan on the deficit router
+        # under fair scheduling — the fleet the repo would actually run
+        pt = next(
+            (f for f in frontier
+             if (f.get("plan"), f.get("router"), f.get("policy"))
+             == ("tuned4", "deficit", "fair")),
+            next((f for f in frontier if f.get("min_shards") is not None),
+                 None),
+        )
+        if pt:
+            uniform = next(
+                (f.get("min_shards") for f in frontier
+                 if (f.get("router"), f.get("policy"), f.get("plan"))
+                 == (pt.get("router"), pt.get("policy"), "uniform8")),
+                None,
+            )
+            return dict(target=target, gops_w=pt.get("gops_w"), cert=None,
+                        min_shards=pt.get("min_shards"),
+                        uniform_min_shards=uniform)
     best = max((r for r in rows if r.get("gops_w")),
                key=lambda r: r["gops_w"], default=None)
     if best:

@@ -28,6 +28,13 @@ Canonical traces
     ~1.4 chips of modeled work; the scaled variants are the fabric
     bench's saturation workloads — one gateway backlogs superlinearly,
     an N-shard fabric keeps per-class p99 near baseline.
+
+``diurnal_smoke``
+    One compressed diurnal period materialized from the *streaming*
+    generators in ``repro.workload.diurnal`` (day-curve-thinned Poisson
+    interactive + day-modulated on-off batch bursts + sparse seg, each
+    with a deadline class) — the committed, replayable smoke slice of
+    the capacity planner's workload family.
 """
 from __future__ import annotations
 
@@ -37,7 +44,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.workload import arrivals, from_streams  # noqa: E402
+from repro.workload import arrivals, diurnal, from_streams  # noqa: E402
 
 
 def gateway_burst(seed: int = 20260729):
@@ -132,10 +139,71 @@ def gateway_burst_scaled(factor: int, seed: int = 20260729):
     )
 
 
+def diurnal_smoke(seed: int = 20260808):
+    """A materialized slice of the streaming diurnal workload family
+    (``repro.workload.diurnal``) — a committed, replayable smoke trace
+    for the capacity planner's generators.  The capacity bench itself
+    streams lazily and never materializes; this trace pins a small
+    prefix of the same process family into schema v1 so the generators'
+    output is itself under the trace round-trip + bench-tracker regime.
+    """
+    period = 9_600_000  # a compressed 12-round "day"
+    span = period
+    interactive = diurnal.take_until(
+        diurnal.diurnal(seed=seed, peak_interval=150_000, period=period,
+                        floor=0.2, start=50_000),
+        span,
+    )
+    batch = diurnal.take_until(
+        diurnal.modulate(
+            diurnal.iter_on_off(seed=seed + 1, burst_interval=250_000,
+                                on_mean=800_000, off_mean=1_600_000,
+                                start=150_000),
+            seed=seed + 1, period=period, floor=0.2,
+        ),
+        span,
+    )
+    seg = diurnal.take_until(
+        diurnal.iter_poisson(seed=seed + 2, mean_interval=2_000_000,
+                             start=600_000),
+        span,
+    )
+    return from_streams(
+        "diurnal_smoke",
+        seed,
+        [
+            dict(kind="lm", qos="interactive", arrivals=list(interactive),
+                 payload=dict(prompt_len=4, max_new=8),
+                 deadline_cycles=400_000),
+            dict(kind="lm", qos="batch", arrivals=list(batch),
+                 payload=dict(prompt_len=24, max_new=4),
+                 deadline_cycles=8_000_000),
+            dict(kind="seg", qos="seg", arrivals=list(seg),
+                 payload=dict(h=96, w=80), deadline_cycles=4_000_000),
+        ],
+        description=(
+            "One compressed diurnal period (raised-cosine day curve over "
+            "Poisson interactive + on-off batch bursts + sparse seg), "
+            "materialized from the streaming generators the capacity "
+            "planner drives lazily"
+        ),
+        meta=dict(
+            source="generated",
+            round_budget=800_000,
+            shares=dict(interactive=0.4, batch=0.3, seg=0.3),
+            period=period,
+            floor=0.2,
+            lm="minitron_4b smoke",
+            seg="unet hw=(96,80) in_ch=4 base=8 depth=2 cps=1",
+        ),
+    )
+
+
 BUILDERS = {
     "gateway_burst": gateway_burst,
     "gateway_burst_x10": lambda: gateway_burst_scaled(10),
     "gateway_burst_x100": lambda: gateway_burst_scaled(100),
+    "diurnal_smoke": diurnal_smoke,
 }
 
 

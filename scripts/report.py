@@ -7,6 +7,9 @@ Reads ``BENCH_LEDGER.jsonl`` (the per-revision headline ledger
 payloads, and renders GOPS/W + latency trend tables per bench plus the
 span-breakdown tables (queued / executing / preempted decomposition of
 the exact p50/p99 requests) carried by instrumented bench payloads.
+When ``BENCH_capacity.json`` is present, the report also renders the
+cost-per-SLO capacity frontier and the per-grid-point SLO burn +
+miss-attribution tables.
 
     python scripts/report.py [--ledger BENCH_LEDGER.jsonl]
                              [--benches BENCH_*.json ...]
@@ -32,6 +35,7 @@ DEFAULT_BENCHES = (
     "BENCH_autotune.json",
     "BENCH_gateway.json",
     "BENCH_fabric.json",
+    "BENCH_capacity.json",
 )
 
 

@@ -25,12 +25,31 @@ seed and trace that produced the run.  Four pieces:
     Record a live gateway/fabric's arrivals back into workload trace
     schema v1, so a production-shaped run replays bit-identically in CI.
 
+:mod:`repro.obs.slo`
+    Declarative per-class :class:`~repro.obs.slo.SloSpec` objectives and
+    the online :class:`~repro.obs.slo.SloMonitor` sink: rolling
+    multi-window burn rates on the modeled clock, per shard and
+    fleet-aggregated, with cumulative miss counts reconciled
+    integer-exactly against the offline span-derived ones.
+
+:mod:`repro.obs.attrib`
+    Deadline-miss attribution: classify each miss by its dominant span
+    segment (queued / preempted / service / overdraft) — the *why*
+    behind a burn rate, surfaced in ``stats()`` and the reports.
+
 :mod:`repro.obs.report`
     The ledger report generator: GOPS/W + p99 trend tables from
-    ``BENCH_LEDGER.jsonl`` and span-breakdown tables from committed
-    ``BENCH_*.json`` artifacts — regenerated without re-running benches
-    (``scripts/report.py`` is the CLI).
+    ``BENCH_LEDGER.jsonl``, span-breakdown and SLO burn/attribution
+    tables from committed ``BENCH_*.json`` artifacts — regenerated
+    without re-running benches (``scripts/report.py`` is the CLI).
 """
+from .attrib import (  # noqa: F401
+    ATTRIB_CLASSES,
+    attribute,
+    attribution_shares,
+    classify_segments,
+    span_misses,
+)
 from .events import (  # noqa: F401
     NULL_SINK,
     Event,
@@ -41,4 +60,5 @@ from .events import (  # noqa: F401
     TeeSink,
     payload_spec,
 )
+from .slo import SloMonitor, SloSpec, find_monitor  # noqa: F401
 from .spans import Span, assemble, breakdown, reconcile  # noqa: F401

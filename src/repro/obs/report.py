@@ -16,7 +16,11 @@ Inputs are the repo's own committed CI artifacts:
     exact-order-statistic latency breakdowns assembled from the event
     bus (:mod:`repro.obs.spans`) — rendered as "the p99 request spent X
     queued / Y executing / Z preempted" tables, plus the integer
-    reconciliation verdict against the cycle ledgers.
+    reconciliation verdict against the cycle ledgers.  The capacity
+    payload (``BENCH_capacity.json``) additionally yields the
+    cost-per-SLO frontier table and per-grid-point SLO burn +
+    miss-attribution tables (:func:`frontier_table` /
+    :func:`slo_tables`).
 
 Output is markdown (the CI artifact) and a JSON twin for programmatic
 consumers.  ``scripts/report.py`` is the CLI.
@@ -67,7 +71,7 @@ def trend(entries) -> dict[str, list[dict]]:
     return series
 
 
-_LATENCY_KEYS = ("interactive_p99_ms", "seg_p99_ms")
+_LATENCY_KEYS = ("interactive_p99_ms", "seg_p99_ms", "min_shards")
 
 
 def _fmt(v, nd=3) -> str:
@@ -152,6 +156,84 @@ def span_tables(payload: dict) -> str | None:
     return "\n".join(lines)
 
 
+def frontier_table(payload: dict) -> str | None:
+    """Render the capacity payload's cost-per-SLO frontier: per (plan,
+    router, policy), the minimum shard count meeting every SLO and that
+    fleet's GOPS/W."""
+    if payload.get("bench") != "capacity":
+        return None
+    frontier = payload.get("frontier")
+    if not frontier:
+        return None
+    head = ["plan", "router", "policy", "min shards", "gops_w",
+            "miss attribution at frontier"]
+    lines = [
+        "| " + " | ".join(head) + " |",
+        "|" + "|".join("---" for _ in head) + "|",
+    ]
+    for f in frontier:
+        shares = f.get("attribution_shares") or {}
+        # summarize per-class shares into the classes that actually
+        # carry weight at this point ("clean" when nothing misses)
+        parts = []
+        for qos in sorted(shares):
+            top = {k: v for k, v in shares[qos].items() if v}
+            if top:
+                parts.append(
+                    qos + ": " + ", ".join(
+                        f"{k} {v:.0%}" for k, v in sorted(
+                            top.items(), key=lambda kv: -kv[1])
+                    )
+                )
+        lines.append(
+            "| " + " | ".join([
+                str(f.get("plan")), str(f.get("router")),
+                str(f.get("policy")),
+                _fmt(f.get("min_shards")), _fmt(f.get("gops_w")),
+                "; ".join(parts) or "clean",
+            ]) + " |"
+        )
+    return "\n".join(lines)
+
+
+def slo_tables(payload: dict) -> str | None:
+    """Render per-grid-point SLO burn + miss-attribution rows from the
+    capacity payload: one line per point — met verdict, fleet deadline
+    misses, the interactive class's cumulative burn (miss rate over
+    budget), and the queued / preempted / service / overdraft split of
+    every miss."""
+    if payload.get("bench") != "capacity":
+        return None
+    rows = payload.get("rows")
+    if not rows:
+        return None
+    classes = payload.get("attrib_classes") or [
+        "queued", "preempted", "service", "overdraft"
+    ]
+    head = ["point", "SLO", "misses", "interactive burn"] + list(classes)
+    lines = [
+        "| " + " | ".join(head) + " |",
+        "|" + "|".join("---" for _ in head) + "|",
+    ]
+    for r in rows:
+        per_class = r.get("slo", {}).get("per_class", {})
+        burn = per_class.get("interactive", {}).get("burn", {})
+        totals = {c: 0 for c in classes}
+        for c in per_class.values():
+            for k, v in (c.get("attribution") or {}).items():
+                totals[k] = totals.get(k, 0) + v
+        lines.append(
+            "| " + " | ".join([
+                str(r.get("label")),
+                "met" if r.get("slo", {}).get("met") else "**miss**",
+                str(r.get("deadline_misses")),
+                _fmt(burn.get("cumulative"), 2),
+                *[str(totals.get(c, 0)) for c in classes],
+            ]) + " |"
+        )
+    return "\n".join(lines)
+
+
 def build_report(ledger_path, bench_paths) -> tuple[str, dict]:
     """Assemble the full report; returns ``(markdown, json_payload)``."""
     entries = read_ledger(ledger_path)
@@ -192,11 +274,43 @@ def build_report(ledger_path, bench_paths) -> tuple[str, dict]:
         md.append(table)
         md.append("")
 
+    capacity = benches.get("capacity")
+    frontier_md = frontier_table(capacity) if capacity else None
+    if frontier_md:
+        md.append("## Capacity frontier — cost per SLO")
+        md.append("")
+        md.append(
+            "Minimum shard count meeting every declared SLO per (plan, "
+            "router, policy), under the shared diurnal workload "
+            "(`BENCH_capacity.json`); attribution shows where the "
+            "frontier fleet's residual misses come from:"
+        )
+        md.append("")
+        md.append(frontier_md)
+        md.append("")
+    slo_md = slo_tables(capacity) if capacity else None
+    if slo_md:
+        md.append("## SLO burn + miss attribution per grid point")
+        md.append("")
+        md.append(
+            "Online `SloMonitor` verdicts (reconciled integer-exactly "
+            "with offline span-derived misses): cumulative burn is the "
+            "miss rate over the class budget (>1 = objective blown); "
+            "misses split by dominant span segment:"
+        )
+        md.append("")
+        md.append(slo_md)
+        md.append("")
+
     payload = dict(
         schema="repro.obs.report",
         version=1,
         ledger_entries=len(entries),
         trends=series,
+        capacity=dict(
+            frontier=capacity.get("frontier"),
+            gate_holds=_gate_holds(capacity),
+        ) if capacity else None,
         benches={
             b: dict(
                 bench=b,

@@ -53,12 +53,24 @@ class Span:
     arrival: int | None = None
     admitted: int | None = None
     finished: int | None = None
+    deadline: int | None = None
     exec_cycles: int = 0
     n_exec: int = 0
 
     @property
     def done(self) -> bool:
         return self.arrival is not None and self.finished is not None
+
+    @property
+    def missed_deadline(self) -> bool:
+        """Completed past the absolute deadline its submit/import event
+        carried (the offline truth :mod:`repro.obs.attrib` and the online
+        :class:`~repro.obs.slo.SloMonitor` are reconciled on)."""
+        return (
+            self.done
+            and self.deadline is not None
+            and self.finished > self.deadline
+        )
 
     @property
     def admitted_eff(self) -> int | None:
@@ -127,6 +139,8 @@ def assemble(events) -> list[Span]:
         if et in ("submit", "import"):
             # import re-keys a stolen request: its arrival travels with it
             sp.arrival = int(d.get("arrival", e.cycle))
+            if d.get("deadline") is not None:
+                sp.deadline = int(d["deadline"])
             sp.qos = d.get("qos", sp.qos)
             sp.kind = d.get("kind", sp.kind)
         elif et == "admit":

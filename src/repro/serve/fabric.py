@@ -112,6 +112,16 @@ class Fabric:
         self._outstanding = [0] * n  # routed-but-undrained estimated cycles
         self._prev = [g.ledger_snapshot() for g in shards]
         self.dispatched = [0] * n  # arrivals routed per shard
+        # router-decision quality counters (always maintained — integer
+        # bumps, independent of any armed sink, so instrumented and
+        # uninstrumented runs report identical stats):
+        #   decided          routing decisions with a real alternative
+        #   chose_shallower  chosen queue strictly shallower than the alt
+        #   tie              chosen and alternative depths equal
+        #   depth_gap_sum    Σ (alt depth - chosen depth) over decisions
+        self.route_quality = dict(
+            decided=0, chose_shallower=0, tie=0, depth_gap_sum=0,
+        )
         self.stolen = 0  # requests moved by work stealing (lifetime)
         self.stolen_from = [0] * n
         self.stolen_to = [0] * n
@@ -188,21 +198,41 @@ class Fabric:
         prepared = adapter.prepare(payload, rid=-1, **prep_kw)
         return prepared, int(adapter.estimate_cycles(prepared))
 
-    def _route(self, qos: str, est: int) -> int:
+    def _route(self, qos: str, est: int) -> tuple[int, int | None]:
+        """Pick the destination shard; returns ``(dst, alt)`` where
+        ``alt`` is the shard the decision rejected (the p2c losing draw,
+        the deficit router's most-loaded shard) — ``None`` when the
+        decision had no alternative (class pinning, single shard, p2c
+        drawing the same shard twice)."""
         n = len(self.shards)
         if n == 1:
-            return 0
+            return 0, None
         if self.router == "class":
-            return self.class_map[qos]
+            return self.class_map[qos], None
         if self.router == "deficit":
             # least outstanding modeled work; ties to the lowest index
-            return min(range(n), key=lambda s: (self._outstanding[s], s))
+            dst = min(range(n), key=lambda s: (self._outstanding[s], s))
+            alt = max(range(n), key=lambda s: (self._outstanding[s], -s))
+            return dst, (None if alt == dst else alt)
         # p2c: two counter-keyed draws, the less loaded shard wins
         k = self._dispatch_counter
         i = int(counter_uniform(self.seed, 2 * k) * n)
         j = int(counter_uniform(self.seed, 2 * k + 1) * n)
         load = lambda s: (len(self.shards[s].queue), self._outstanding[s], s)
-        return min(i, j, key=load)
+        dst = min(i, j, key=load)
+        return dst, (None if i == j else (j if dst == i else i))
+
+    def _record_route_quality(self, dst: int, alt: int | None) -> None:
+        rq = self.route_quality
+        rq["decided"] += 1
+        if alt is None:  # pinned / single shard / p2c same draw:
+            return       # no alternative to compare against
+        dq, aq = len(self.shards[dst].queue), len(self.shards[alt].queue)
+        if dq < aq:
+            rq["chose_shallower"] += 1
+        elif dq == aq:
+            rq["tie"] += 1
+        rq["depth_gap_sum"] += aq - dq
 
     # ------------------------------------------------------ work stealing
 
@@ -225,12 +255,17 @@ class Fabric:
             take = min(self.steal_batch, free, surplus)
             if d == t or take < 1:
                 continue
+            src_q = len(donor.queue)  # donor depth at the decision
             moved = donor.export_queued(take)
             thief.import_queued(moved)
             est_moved = sum(g.est_cycles for g in moved)
             if self._obs_on and moved:
+                # src_q/dst_q: queue depths the decision saw (thief was
+                # empty by the steal precondition) — steal pressure is
+                # readable off the stream without replaying state
                 self._obs.emit(Event(self.clock, "steal", dict(
                     src=d, dst=t, n=len(moved), est=est_moved,
+                    src_q=src_q, dst_q=0,
                 )))
             self._outstanding[d] = max(self._outstanding[d] - est_moved, 0)
             self._outstanding[t] += est_moved
@@ -249,15 +284,21 @@ class Fabric:
         for cyc, kind, payload, kw in sorted(arrivals, key=lambda a: a[0]):
             prepared, est = self._estimate(kind, payload, kw)
             qos = kw.get("qos") or kind
-            s = self._route(qos, est)
+            s, alt = self._route(qos, est)
+            self._record_route_quality(s, alt)
+            if self._obs_on:
+                # chosen-vs-alternative depths make router quality
+                # inspectable from the stream (p2c's classic diagnostic);
+                # emitted before the counters move, at decision state
+                data = dict(kind=kind, qos=qos, dst=s, est=est,
+                            q=len(self.shards[s].queue))
+                if alt is not None:
+                    data.update(alt=alt, alt_q=len(self.shards[alt].queue))
+                self._obs.emit(Event(int(cyc), "route", data))
             self._dispatch_counter += 1
             self.dispatched[s] += 1
             self._outstanding[s] += est
             by_shard[s].append((cyc, kind, prepared, kw))
-            if self._obs_on:
-                self._obs.emit(Event(int(cyc), "route", dict(
-                    kind=kind, qos=qos, dst=s, est=est,
-                )))
         if self.steal:
             self._steal_pass()
         for s, gw in enumerate(self.shards):
@@ -334,6 +375,11 @@ class Fabric:
                 p50_ms=None if p50 is None else float(p50),
                 p99_ms=None if p99 is None else float(p99),
                 max_ms=float(max(lats)) if lats else None,
+                # fleet-wide: stolen requests count under the shard that
+                # completed them, so the sum over shards is exact
+                deadline_misses=sum(
+                    1 for g in of_c if g.done and g.finished > g.deadline
+                ),
             )
         add = self.additivity()
         total_ops = add["ledger_total_ops"]
@@ -344,7 +390,7 @@ class Fabric:
         )
         power = chip_power * len(self.shards)
         gops = total_ops / elapsed_s / 1e9 if elapsed_s > 0 else 0.0
-        return dict(
+        out = dict(
             policy=self.policy,
             n_shards=len(self.shards),
             router=self.router,
@@ -358,6 +404,7 @@ class Fabric:
             worked_cycles=add["ledger_total_worked"],
             additivity=add,
             dispatched=list(self.dispatched),
+            router_stats=dict(router=self.router, **self.route_quality),
             stolen=self.stolen,
             stolen_from=list(self.stolen_from),
             stolen_to=list(self.stolen_to),
@@ -389,3 +436,11 @@ class Fabric:
                 for s, g in enumerate(self.shards)
             ],
         )
+        # an armed SloMonitor surfaces fleet-aggregated burn rates +
+        # miss attribution (per-shard scopes via monitor.summary(shard))
+        from repro.obs.slo import FLEET, find_monitor
+
+        mon, _ = find_monitor(self._obs)
+        if mon is not None:
+            out["slo"] = mon.summary(scope=FLEET)
+        return out

@@ -1443,6 +1443,12 @@ class Gateway:
                 p50_ms=None if p50 is None else float(p50),
                 p99_ms=None if p99 is None else float(p99),
                 max_ms=float(max(lats)) if lats else None,
+                # every request carries an absolute deadline (explicit
+                # deadline_cycles or deadline_factor x estimate) — misses
+                # reconcile with the SloMonitor's online counts
+                deadline_misses=sum(
+                    1 for g in of_c if g.done and g.finished > g.deadline
+                ),
             )
         total_ops = sum(a.total_ops for a in self.adapters.values())
         elapsed_s = self.clock / cm.FREQ_HZ
@@ -1451,7 +1457,7 @@ class Gateway:
             / cm.PAPER_TABLE1["proposed"]["gops_w"]
         )
         gops = total_ops / elapsed_s / 1e9 if elapsed_s > 0 else 0.0
-        return dict(
+        out = dict(
             policy=self.policy,
             rounds=self.rounds,
             clock_cycles=self.clock,
@@ -1473,3 +1479,11 @@ class Gateway:
                 if getattr(a, "fallback_reason", None)
             },
         )
+        # an armed SloMonitor (directly, teed, or shard-wrapped) surfaces
+        # its burn rates + miss attribution for this gateway's scope
+        from repro.obs.slo import find_monitor
+
+        mon, shard = find_monitor(self._obs)
+        if mon is not None:
+            out["slo"] = mon.summary(scope=shard)
+        return out

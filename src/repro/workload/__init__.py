@@ -11,8 +11,20 @@ Three layers, one artifact:
   traces live under ``traces/`` in the repo root;
 * :mod:`repro.workload.replay` — the open-loop harness that injects a
   trace's arrivals *inside* gateway rounds at their stamped cycles and
-  summarizes per-class latency / GOPS-per-W in the bench tracker schema.
+  summarizes per-class latency / GOPS-per-W in the bench tracker schema;
+  :func:`~repro.workload.replay.replay_stream` is its lazy twin for
+  generator feeds that never materialize;
+* :mod:`repro.workload.diurnal` — streaming diurnal/burst generators:
+  infinite prefix-stable twins of the arrival processes, day-curve
+  thinning (:func:`~repro.workload.diurnal.modulate`), and
+  :func:`~repro.workload.diurnal.stream_requests` composing them into
+  the lazy feed the capacity planner drives.
 """
-from . import arrivals, replay, trace  # noqa: F401
-from .replay import lm_materializer, replay as replay_trace, seg_materializer  # noqa: F401
+from . import arrivals, diurnal, replay, trace  # noqa: F401
+from .replay import (  # noqa: F401
+    lm_materializer,
+    replay as replay_trace,
+    replay_stream,
+    seg_materializer,
+)
 from .trace import Trace, TraceRequest, from_streams  # noqa: F401

@@ -145,10 +145,46 @@ def replay(
     return summarize(gateway, trace)
 
 
-def summarize(gateway, trace: Trace) -> dict:
-    """The replay summary in the shared bench-tracker schema.
+def replay_stream(gateway, feed, *, label: str = "stream",
+                  max_rounds: int = 1_000_000) -> dict:
+    """Open-loop replay from a *lazy* arrival feed — the streaming twin
+    of :func:`replay` for workloads too large to materialize.
 
-    Percentiles inherit the stack-wide exact-order-statistic semantics
+    ``feed`` is a sorted iterable of ``(cycle, kind, payload, kw)``
+    tuples, e.g. :func:`repro.workload.diurnal.stream_requests` over
+    generator arrivals: only one round's window of arrivals is ever held
+    in memory, so a million-request day streams through in O(in-flight)
+    space.  Payloads must already be engine-native (modeled adapters
+    take spec dicts directly — the capacity planner's path).
+
+    Returns the :func:`summarize` schema with a ``stream`` block
+    (``label`` + fed count) in place of ``trace``.
+    """
+    it = iter(feed)
+    nxt = next(it, None)
+    fed = 0
+    while nxt is not None or gateway.pending():
+        if gateway.rounds >= max_rounds:
+            raise RuntimeError(
+                f"stream replay {label!r} did not drain within "
+                f"{max_rounds} rounds"
+            )
+        window_end = gateway.clock + gateway.round_budget
+        due = []
+        while nxt is not None and nxt[0] < window_end:
+            due.append(nxt)
+            fed += 1
+            nxt = next(it, None)
+        gateway.step_round(arrivals=due)
+    out = _summary(gateway, f"stream/{label}")
+    out["stream"] = dict(label=label, n_requests=fed)
+    return out
+
+
+def _summary(gateway, row_prefix: str) -> dict:
+    """The shared summary core (:func:`summarize` adds the trace block,
+    :func:`replay_stream` the stream block).  Percentiles inherit the
+    stack-wide exact-order-statistic semantics
     (:func:`repro.serve.clock.exact_percentile`) from ``gateway.stats()``;
     the ``overall`` aggregate applies the same helper across every
     completed request regardless of class."""
@@ -164,21 +200,14 @@ def summarize(gateway, trace: Trace) -> dict:
             continue
         rows.append(
             (
-                f"replay/{trace.name}/{gateway.policy}/{qos}",
+                f"{row_prefix}/{gateway.policy}/{qos}",
                 (pc["p99_ms"] or 0.0) * 1e3,  # modeled us, like segserve
                 f"n={pc['n']};completed={pc['completed']};"
-                f"p50_ms={pc['p50_ms']:.3f};p99_ms={pc['p99_ms']:.3f}",
+                f"p50_ms={pc['p50_ms']:.3f};p99_ms={pc['p99_ms']:.3f};"
+                f"misses={pc['deadline_misses']}",
             )
         )
-    return dict(
-        trace=dict(
-            name=trace.name,
-            version=trace.version,
-            seed=trace.seed,
-            n_requests=len(trace),
-            span_cycles=trace.span_cycles,
-            qos_classes=trace.qos_classes,
-        ),
+    out = dict(
         policy=gateway.policy,
         rounds=st["rounds"],
         clock_cycles=st["clock_cycles"],
@@ -192,6 +221,29 @@ def summarize(gateway, trace: Trace) -> dict:
             p50_ms=None if overall_p50 is None else float(overall_p50),
             p99_ms=None if overall_p99 is None else float(overall_p99),
         ),
+        # fleet/gateway total, reconciled with the per-class counters
+        # gateway.stats() derives and the SloMonitor's online counts
+        deadline_misses=sum(
+            pc.get("deadline_misses", 0)
+            for pc in st["per_class"].values()
+        ),
         forced=st["forced"],
         rows=rows,
     )
+    if "slo" in st:
+        out["slo"] = st["slo"]
+    return out
+
+
+def summarize(gateway, trace: Trace) -> dict:
+    """The replay summary in the shared bench-tracker schema."""
+    out = _summary(gateway, f"replay/{trace.name}")
+    out["trace"] = dict(
+        name=trace.name,
+        version=trace.version,
+        seed=trace.seed,
+        n_requests=len(trace),
+        span_cycles=trace.span_cycles,
+        qos_classes=trace.qos_classes,
+    )
+    return out

@@ -232,3 +232,58 @@ def test_cli_runs_clean_against_self(tmp_path, against):
     assert proc.returncode == 0, proc.stdout + proc.stderr
     report = json.loads(out.read_text())
     assert report["holds"] and report["base_ref"] == against
+
+
+# ------------------------------------------------------- capacity payloads
+
+
+CAPACITY = dict(
+    bench="capacity",
+    key="diurnal:1:p100:u100@v1;grid=s[2, 4]xr['deficit']xp['fair']"
+        "xpl['uniform8', 'tuned4']",
+    rows=[
+        dict(label="uniform8/deficit-fair/s2", gops_w=2.0,
+             per_class=dict(interactive=dict(p99_ms=90.0))),
+        dict(label="uniform8/deficit-fair/s4", gops_w=1.0,
+             per_class=dict(interactive=dict(p99_ms=5.0))),
+        dict(label="tuned4/deficit-fair/s2", gops_w=2.0,
+             per_class=dict(interactive=dict(p99_ms=4.0))),
+    ],
+    frontier=[
+        dict(plan="uniform8", router="deficit", policy="fair",
+             min_shards=4, gops_w=1.0),
+        dict(plan="tuned4", router="deficit", policy="fair",
+             min_shards=2, gops_w=2.0),
+    ],
+)
+
+
+def test_capacity_rows_key_on_sweep_key():
+    """Capacity rows compare only on the identical grid + workload key:
+    a grid change reads as a target change — skipped, never failed."""
+    entries = bd.diff_file("f", CAPACITY, copy.deepcopy(CAPACITY),
+                           gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    # a same-key GOPS/W drop fails like any frontier regression
+    worse = copy.deepcopy(CAPACITY)
+    worse["rows"][1]["gops_w"] = 0.5
+    assert ("cap:uniform8/deficit-fair/s4", "gops_w") in _regressions(
+        bd.diff_file("f", CAPACITY, worse, gops_w_tol=0.05, cert_tol=0.01)
+    )
+    # a grid bump changes the key: every row skips
+    regrown = copy.deepcopy(worse)
+    regrown["key"] = CAPACITY["key"].replace("s[2, 4]", "s[2, 4, 8]")
+    entries = bd.diff_file("f", CAPACITY, regrown,
+                           gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    assert any(e["status"] == "skipped" for e in entries)
+
+
+def test_capacity_headline_is_flagship_frontier_point():
+    hm = bd.headline_metrics(CAPACITY)
+    assert hm["target"] == CAPACITY["key"]
+    assert hm["min_shards"] == 2 and hm["gops_w"] == 2.0
+    assert hm["uniform_min_shards"] == 4
+    # interactive p99 rides along as the warning-only latency metric
+    rows = {rid: m for rid, _, m in bd.comparable_rows(CAPACITY)}
+    assert rows["cap:uniform8/deficit-fair/s2"]["minority_p99_ms"] == 90.0

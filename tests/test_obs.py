@@ -551,3 +551,44 @@ def test_bench_diff_headline_gains_span_columns():
     assert h["p99_queued_ms"] == 3.0
     assert h["p99_exec_ms"] == 1.5
     assert h["p99_preempted_ms"] == 4.5
+
+
+def test_report_capacity_frontier_and_slo_tables(tmp_path):
+    from repro.obs.report import build_report, frontier_table, slo_tables
+
+    cap = dict(
+        bench="capacity",
+        attrib_classes=["queued", "preempted", "service", "overdraft"],
+        rows=[dict(
+            label="uniform8/deficit-fair/s2", gops_w=2.0,
+            deadline_misses=5,
+            slo=dict(met=False, per_class=dict(interactive=dict(
+                burn=dict(cumulative=2.5, windows={}),
+                attribution=dict(queued=3, preempted=2, service=0,
+                                 overdraft=0),
+            ))),
+        )],
+        frontier=[dict(
+            plan="uniform8", router="deficit", policy="fair",
+            min_shards=4, gops_w=1.0,
+            attribution_shares=dict(interactive=dict(
+                queued=0.0, preempted=1.0, service=0.0, overdraft=0.0)),
+        )],
+        gate=dict(holds=True),
+    )
+    ft = frontier_table(cap)
+    assert "| uniform8 | deficit | fair | 4 | 1.000 |" in ft
+    assert "preempted 100%" in ft
+    slo = slo_tables(cap)
+    assert "**miss**" in slo and "| 3 | 2 | 0 | 0 |" in slo
+    # non-capacity payloads render nothing
+    assert frontier_table(dict(bench="gateway")) is None
+    assert slo_tables(dict(bench="gateway")) is None
+
+    path = tmp_path / "BENCH_capacity.json"
+    path.write_text(json.dumps(cap))
+    md, payload = build_report(tmp_path / "no_ledger.jsonl", [str(path)])
+    assert "## Capacity frontier — cost per SLO" in md
+    assert "## SLO burn + miss attribution per grid point" in md
+    assert payload["capacity"]["gate_holds"] is True
+    assert payload["capacity"]["frontier"] == cap["frontier"]

@@ -1,0 +1,337 @@
+"""SLO observatory (repro.obs.slo + repro.obs.attrib): declarative SLO
+specs, online burn-rate monitoring on the modeled cycle clock, span-based
+miss attribution, integer-exact online/offline reconciliation on a single
+gateway and a >=4-shard fabric, router observability counters, the
+streaming replay twin, and the capacity planner smoke."""
+import pytest
+from _hypothesis_compat import given, settings, st
+from test_gateway import FakeAdapter
+
+from repro.core import cycle_model as cm
+from repro.obs import (
+    ATTRIB_CLASSES,
+    RecordingSink,
+    SloMonitor,
+    SloSpec,
+    TeeSink,
+    assemble,
+    attribute,
+    attribution_shares,
+    classify_segments,
+    find_monitor,
+    span_misses,
+)
+from repro.obs.slo import FLEET
+from repro.serve.fabric import Fabric
+from repro.serve.gateway import Gateway
+from repro.workload import arrivals, from_streams
+from repro.workload import replay as replay_mod
+
+
+def _cost_mat(treq, seed, idx):
+    return treq.payload["cost"], {}
+
+
+def mk_gateway(*, policy="fair", sink=None, unit=300, slots=3,
+               round_budget=2_000, shares=None):
+    return Gateway(
+        [FakeAdapter("a", slots=slots, unit=unit),
+         FakeAdapter("b", slots=slots, unit=unit)],
+        policy=policy, round_budget=round_budget,
+        shares=shares or {"a": 0.5, "b": 0.5},
+        sink=sink,
+    )
+
+
+def mk_deadline_trace(seed=13, n_a=14, n_b=9, *, tight=2_500, loose=9_000):
+    """The obs probe trace with per-class deadlines: class ``a`` tight
+    enough that queueing shows up as misses, ``b`` loose."""
+    return from_streams(
+        "slo_probe", seed,
+        [
+            dict(kind="a", qos="a",
+                 arrivals=arrivals.poisson(n_a, mean_interval=900,
+                                           seed=seed),
+                 payload=lambda i: dict(cost=400 + 150 * (i % 5)),
+                 deadline_cycles=tight),
+            dict(kind="b", qos="b",
+                 arrivals=arrivals.on_off(n_b, seed=seed + 1,
+                                          burst_interval=200, on_mean=900,
+                                          off_mean=3_000),
+                 payload=dict(cost=1_200), deadline_cycles=loose),
+        ],
+    )
+
+
+def mk_fabric(n=4, *, sink=None, seed=23, router="deficit", policy="fair"):
+    return Fabric(
+        [mk_gateway(policy=policy) for _ in range(n)],
+        router=router, seed=seed, sink=sink,
+    )
+
+
+def replay_once(target, trace, **kw):
+    return replay_mod.replay(target, trace, {"a": _cost_mat, "b": _cost_mat},
+                             **kw)
+
+
+SPECS = (SloSpec("a", pct=99, latency_target_ms=0.02, miss_budget=0.1),
+         SloSpec("b", pct=99, miss_budget=0.25))
+
+
+# ------------------------------------------------------------- SloSpec
+
+
+def test_slo_spec_validation_and_cycles():
+    s = SloSpec("interactive", pct=99, latency_target_ms=6.0,
+                miss_budget=0.05)
+    assert s.latency_target_cycles == int(round(6.0 * cm.FREQ_HZ / 1e3))
+    d = s.to_dict()
+    assert d["qos"] == "interactive" and d["miss_budget"] == 0.05
+    assert SloSpec("x").latency_target_cycles is None
+    with pytest.raises(ValueError):
+        SloSpec("x", pct=0)
+    with pytest.raises(ValueError):
+        SloSpec("x", pct=101)
+    with pytest.raises(ValueError):
+        SloSpec("x", miss_budget=0.0)
+    with pytest.raises(ValueError):
+        SloSpec("x", miss_budget=1.5)
+    with pytest.raises(ValueError):
+        SloSpec("x", latency_target_ms=-1.0)
+
+
+# ------------------------------------------------- attribution classifier
+
+
+def test_classify_segments_dominance_and_ties():
+    assert classify_segments(100, 10, 10) == "queued"
+    assert classify_segments(10, 10, 100) == "preempted"
+    assert classify_segments(10, 100, 10) == "service"
+    # overdraft trumps everything: negative preemption residual means the
+    # request ran past its granted budget
+    assert classify_segments(1_000, 10, -1) == "overdraft"
+    # ties resolve queued > preempted > service
+    assert classify_segments(50, 50, 50) == "queued"
+    assert classify_segments(10, 50, 50) == "preempted"
+    assert classify_segments(0, 0, 0) == "queued"
+
+
+def test_attribute_and_shares_on_real_spans():
+    rec = RecordingSink()
+    gw = mk_gateway(sink=rec)
+    replay_once(gw, mk_deadline_trace())
+    spans = assemble(rec.events)
+    misses = span_misses(spans)
+    assert misses  # the tight class must miss on this probe
+    hist = attribute(spans)
+    assert set(misses) == set(hist)
+    for qos, h in hist.items():
+        assert set(h) == set(ATTRIB_CLASSES)
+        assert sum(h.values()) == misses[qos]
+        shares = attribution_shares(h)
+        assert abs(sum(shares.values()) - 1.0) < 1e-9
+    # a clean class yields all-zero shares
+    assert attribution_shares(dict.fromkeys(ATTRIB_CLASSES, 0)) == \
+        dict.fromkeys(ATTRIB_CLASSES, 0.0)
+
+
+# ------------------------------- online/offline exactness: gateway
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from(["fifo", "fair", "edf"]))
+@settings(max_examples=12, deadline=None)
+def test_gateway_online_offline_miss_reconciliation(seed, policy):
+    """The tentpole gate: the online SloMonitor's cumulative per-class
+    miss counts AND attribution histograms equal the offline
+    span-derived ones, to the integer, on any seed x policy."""
+    mon = SloMonitor(SPECS)
+    rec = RecordingSink()
+    gw = mk_gateway(policy=policy, sink=TeeSink([rec, mon]))
+    summary = replay_once(gw, mk_deadline_trace(seed=seed))
+    r = mon.reconcile(assemble(rec.events))
+    assert r["holds"], r
+    # and the gateway's own stats() counters agree with both
+    stats_misses = {
+        q: c["deadline_misses"]
+        for q, c in summary["per_class"].items() if c["deadline_misses"]
+    }
+    assert stats_misses == r["online"] == r["offline"]
+    assert summary["deadline_misses"] == sum(r["online"].values())
+
+
+# ------------------------------- online/offline exactness: fabric
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from(["class", "p2c", "deficit"]))
+@settings(max_examples=10, deadline=None)
+def test_fabric_online_offline_miss_reconciliation(seed, router):
+    """Same gate on a 4-shard fabric: shard-tagged events, routing,
+    work stealing and export re-keying must not break the integer
+    equality."""
+    mon = SloMonitor(SPECS)
+    rec = RecordingSink()
+    fab = mk_fabric(4, sink=TeeSink([rec, mon]), seed=seed % 97, router=router)
+    summary = replay_once(fab, mk_deadline_trace(seed=seed, n_a=28, n_b=18))
+    r = mon.reconcile(assemble(rec.events))
+    assert r["holds"], r
+    stats_misses = {
+        q: c["deadline_misses"]
+        for q, c in summary["per_class"].items() if c["deadline_misses"]
+    }
+    assert stats_misses == r["online"]
+    # fleet scope aggregates the per-shard scopes exactly
+    per_shard = [mon.miss_counts(s) for s in mon.scopes() if s != FLEET]
+    fleet = {}
+    for d in per_shard:
+        for q, v in d.items():
+            fleet[q] = fleet.get(q, 0) + v
+    assert fleet == mon.miss_counts(FLEET)
+
+
+def test_monitor_tracks_nothing_untracked_on_clean_run():
+    mon = SloMonitor(SPECS)
+    gw = mk_gateway(sink=mon)
+    replay_once(gw, mk_deadline_trace())
+    assert mon.in_flight() == 0
+    for c in mon.summary()["per_class"].values():
+        assert c["untracked"] == 0
+
+
+# ----------------------------------------------------- burn-rate windows
+
+
+def test_burn_rates_windows_and_budget_scaling():
+    mon = SloMonitor(SPECS, windows=(2_000, 16_000))
+    gw = mk_gateway(sink=mon)
+    replay_once(gw, mk_deadline_trace())
+    br = mon.burn_rates("a")
+    assert set(br["windows"]) == {"2000", "16000"}
+    pc = mon.summary()["per_class"]["a"]
+    n, miss = pc["completions"], pc["deadline_misses"]
+    assert pc["miss_rate"] == pytest.approx(miss / n)
+    # cumulative burn is miss rate over budget — budget 0.1 for class a
+    assert br["cumulative"] == pytest.approx((miss / n) / 0.1)
+    # windowed burn rates are nonnegative and finite
+    for v in br["windows"].values():
+        assert v >= 0.0
+
+
+def test_stats_slo_block_present_iff_monitor_armed():
+    mon = SloMonitor(SPECS)
+    gw = mk_gateway(sink=mon)
+    replay_once(gw, mk_deadline_trace())
+    st_ = gw.stats()
+    # a bare gateway's events carry no shard tag: its scope is None
+    assert "slo" in st_ and st_["slo"]["scope"] is None
+    assert set(st_["slo"]["per_class"]) <= {"a", "b"}
+
+    bare = mk_gateway()
+    replay_once(bare, mk_deadline_trace())
+    assert "slo" not in bare.stats()
+
+    fab = mk_fabric(4, sink=SloMonitor(SPECS))
+    replay_once(fab, mk_deadline_trace())
+    assert fab.stats()["slo"]["scope"] == FLEET
+
+
+def test_find_monitor_unwraps_sink_trees():
+    mon = SloMonitor(SPECS)
+    assert find_monitor(mon) == (mon, None)
+    assert find_monitor(TeeSink([RecordingSink(), mon])) == (mon, None)
+    from repro.obs import NULL_SINK, ShardSink
+    m, shard = find_monitor(ShardSink(TeeSink([mon]), 3))
+    assert m is mon and shard == 3
+    assert find_monitor(NULL_SINK) == (None, None)
+
+
+# ------------------------------------------------- router observability
+
+
+def test_fabric_router_stats_and_route_events():
+    rec = RecordingSink(etypes=["route", "steal"])
+    fab = mk_fabric(4, sink=rec, router="p2c")
+    summary = replay_once(fab, mk_deadline_trace(n_a=28, n_b=18))
+    rs = fab.stats()["router_stats"]
+    assert rs["router"] == "p2c"
+    assert rs["decided"] == summary["per_class"]["a"]["n"] + \
+        summary["per_class"]["b"]["n"]
+    assert rs["chose_shallower"] + rs["tie"] <= rs["decided"]
+    assert rs["depth_gap_sum"] >= 0
+    routes = [e for e in rec.events if e.etype == "route"]
+    assert len(routes) == rs["decided"]
+    for e in routes:
+        assert "q" in e.data and "dst" in e.data
+        if "alt" in e.data:  # the losing p2c draw, with its queue depth
+            assert e.data["alt"] != e.data["dst"]
+            assert e.data["alt_q"] >= e.data["q"] - 0  # depths recorded
+    steals = [e for e in rec.events if e.etype == "steal"]
+    for e in steals:  # stealing only fires donor-queue -> idle shard
+        assert e.data["src_q"] >= 1 and e.data["dst_q"] == 0
+
+
+def test_class_router_emits_no_alternatives():
+    rec = RecordingSink(etypes=["route"])
+    fab = mk_fabric(4, sink=rec, router="class")
+    replay_once(fab, mk_deadline_trace())
+    assert rec.events and all("alt" not in e.data for e in rec.events)
+    assert fab.stats()["router_stats"]["router"] == "class"
+
+
+# ------------------------------------------------------- replay_stream
+
+
+def test_replay_stream_matches_materialized_replay():
+    """The lazy feed and the materialized trace replay are the same
+    open-loop schedule: identical per-class stats to the integer."""
+    trace = mk_deadline_trace()
+    gw_t = mk_gateway()
+    s_t = replay_once(gw_t, trace)
+
+    def feed():
+        for idx, tr in enumerate(trace.requests):
+            payload, _ = _cost_mat(tr, trace.seed, idx)
+            kw = dict(qos=tr.qos)
+            if tr.deadline_cycles is not None:
+                kw["deadline_cycles"] = tr.deadline_cycles
+            yield tr.arrival_cycle, tr.kind, payload, kw
+
+    gw_s = mk_gateway()
+    s_s = replay_mod.replay_stream(gw_s, feed(), label="twin")
+    assert s_s["stream"]["n_requests"] == len(trace)
+    assert s_s["per_class"] == s_t["per_class"]
+    assert s_s["deadline_misses"] == s_t["deadline_misses"]
+    assert s_s["clock_cycles"] == s_t["clock_cycles"]
+    assert s_s["rows"][0][0].startswith("stream/twin/")
+
+
+# ------------------------------------------------- capacity planner smoke
+
+
+def test_capacity_planner_smoke_tiny_grid(tmp_path):
+    """A reduced sweep through the real planner: gates run (including
+    the integer reconcile on the instrumented point), the payload lands
+    with frontier + attribution shares."""
+    import json
+
+    from benchmarks import capacity
+
+    out = tmp_path / "BENCH_capacity.json"
+    rows = capacity.run(json_path=str(out), shard_counts=(2, 4),
+                        routers=("deficit",), policies=("fair",),
+                        plans=("uniform8",))
+    assert rows and all(r[0].startswith("capacity/") for r in rows)
+    d = json.loads(out.read_text())
+    assert d["bench"] == "capacity" and d["gate"]["holds"]
+    assert d["gate"]["reconcile"]["holds"]
+    labels = [r["label"] for r in d["rows"]]
+    assert labels == ["uniform8/deficit-fair/s2", "uniform8/deficit-fair/s4"]
+    s2, s4 = d["rows"]
+    # fixed load: every point fed the identical stream
+    assert d["workload"]["n_offered"] > 0
+    assert s4["queue_share"] <= s2["queue_share"]
+    f = d["frontier"][0]
+    assert f["min_shards"] == 4 and f["gops_w"] == s4["gops_w"]
+    assert set(f["attribution_shares"]) <= {"interactive", "batch", "seg"}

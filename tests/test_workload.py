@@ -604,3 +604,135 @@ def test_fifo_swap_hold_does_not_block_other_kinds():
     # the held request was admitted only once the swap had installed
     [swap] = gw.plan_swaps
     assert held.admitted_round >= swap["round"]
+
+
+# ------------------------------------------------- on_off boundary behavior
+
+
+def _fixed_gap(on_dwell, off_dwell, arrival):
+    """A deterministic stand-in for arrivals._exp_gap keyed by domain
+    tag, for pinning on_off's window-edge arithmetic exactly."""
+    def gap(seed, mean, tag, counter):
+        if tag == 0x00FFDEAD:  # ON dwell
+            return float(on_dwell)
+        if tag == 0x0FF0FF00:  # OFF dwell
+            return float(off_dwell)
+        return float(arrival)  # in-burst arrival gap
+    return gap
+
+
+def test_on_off_arrival_exactly_at_window_edge_included(monkeypatch):
+    """An arrival landing exactly at the ON-window boundary belongs to
+    the burst (the <= comparison): ON dwell 100, gaps 50 puts arrival 2
+    at t=100 == on_end — emitted, not deferred past the OFF dwell."""
+    monkeypatch.setattr(arrivals, "_exp_gap", _fixed_gap(100, 1_000, 50))
+    got = arrivals.on_off(4, seed=0, burst_interval=1, on_mean=1,
+                          off_mean=1)
+    # burst 1: 50, 100 (edge); then the residual gap is exactly 0, so
+    # the next window's arrivals sit at off_end+50 and its own edge
+    assert got == [50, 100, 1150, 1200]
+
+
+def test_on_off_zero_length_off_phase_is_seamless(monkeypatch):
+    """A zero-length OFF dwell degenerates to back-to-back ON windows:
+    the straddling-gap residual carries exactly, so arrivals are the
+    pure gap cumsum — window boundaries leave no seam."""
+    monkeypatch.setattr(arrivals, "_exp_gap", _fixed_gap(100, 0, 30))
+    got = arrivals.on_off(8, seed=0, burst_interval=1, on_mean=1,
+                          off_mean=1)
+    assert got == [30 * (i + 1) for i in range(8)]
+
+
+# ------------------------------------------------- diurnal streaming twins
+
+
+def test_iter_twins_prefix_identical_to_list_builders():
+    from itertools import islice
+
+    from repro.workload import diurnal
+
+    kw = dict(seed=11, burst_interval=150, on_mean=700, off_mean=2_500)
+    assert list(islice(diurnal.iter_on_off(**kw), 30)) == \
+        arrivals.on_off(30, **kw)
+    assert list(islice(
+        diurnal.iter_poisson(seed=11, mean_interval=800, start=40), 25
+    )) == arrivals.poisson(25, mean_interval=800, seed=11, start=40)
+
+
+def test_diurnal_prefix_stable_under_seed_reuse():
+    """Re-instantiating the generator from the same seed reproduces the
+    identical prefix, and a longer read never reshuffles a shorter one
+    — the counter-PRNG contract extended through thinning."""
+    from itertools import islice
+
+    from repro.workload import diurnal
+
+    def mk():
+        return diurnal.diurnal(seed=42, peak_interval=500,
+                               period=200_000, floor=0.2)
+
+    a = list(islice(mk(), 40))
+    assert a == sorted(a) and len(set(a)) >= 38  # monotone, ~unique
+    assert list(islice(mk(), 40)) == a
+    assert list(islice(mk(), 15)) == a[:15]
+    # thinning is keyed by candidate index: the accepted stream is a
+    # subsequence of the unthinned candidates
+    base = list(islice(diurnal.iter_poisson(seed=42, mean_interval=500),
+                       400))
+    assert set(a) <= set(base)
+    # a different thinning seed accepts a different subsequence
+    b = list(islice(diurnal.modulate(
+        diurnal.iter_poisson(seed=42, mean_interval=500),
+        seed=43, period=200_000, floor=0.2), 40))
+    assert b != a
+
+
+def test_day_curve_shape_and_validation():
+    from repro.workload import diurnal
+
+    P = 1_000
+    assert diurnal.day_curve(0, period=P, floor=0.15) == pytest.approx(0.15)
+    assert diurnal.day_curve(P // 2, period=P, floor=0.15) == \
+        pytest.approx(1.0)
+    assert diurnal.day_curve(P, period=P, floor=0.15) == pytest.approx(0.15)
+    with pytest.raises(ValueError):
+        diurnal.day_curve(0, period=0)
+    with pytest.raises(ValueError):
+        diurnal.day_curve(0, period=P, floor=1.5)
+
+
+def test_merge_tags_streams_by_index():
+    """Regression: merge() must bind each stream's index at generator
+    creation (a late-bound closure tags every arrival with the last
+    index, collapsing all classes into one)."""
+    from repro.workload import diurnal
+
+    merged = list(diurnal.merge(iter([10, 30]), iter([20]), iter([40])))
+    assert merged == [(10, 0), (20, 1), (30, 0), (40, 2)]
+
+
+def test_stream_requests_compose_until_and_payload_callable():
+    from repro.workload import diurnal
+
+    feed = list(diurnal.stream_requests(
+        [
+            dict(kind="a", arrivals=iter([5, 15, 25]),
+                 payload=lambda i: dict(cost=100 * (i + 1)),
+                 deadline_cycles=50),
+            dict(kind="b", qos="bulk", arrivals=iter([10]),
+                 payload=dict(cost=7)),
+        ],
+        until=20,
+    ))
+    assert [t for t, *_ in feed] == [5, 10, 15]
+    assert feed[0][3] == dict(qos="a", deadline_cycles=50)
+    assert feed[1][1] == "b" and feed[1][3] == dict(qos="bulk")
+    # per-stream payload index, not the merged index
+    assert feed[2][2] == dict(cost=200)
+    with pytest.raises(ValueError, match="kind/arrivals/payload"):
+        list(diurnal.stream_requests([dict(kind="a")]))
+    limited = list(diurnal.stream_requests(
+        [dict(kind="a", arrivals=iter(range(100)), payload=dict())],
+        limit=3,
+    ))
+    assert len(limited) == 3
