@@ -18,7 +18,6 @@ def load(mesh: str = "16x16", tag: str | None = None) -> list[dict]:
         if r.get("mesh") != mesh:
             continue
         parts = p.stem.split("__")
-        has_tag = len(parts) > 3 or (len(parts) == 4)
         r["_tag"] = parts[3] if len(parts) > 3 else ""
         if (tag or "") != r["_tag"]:
             continue

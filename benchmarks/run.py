@@ -1,12 +1,13 @@
 """Benchmark harness — one section per paper table/claim.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay|fabric|capacity]
+        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay|fabric|capacity|specdecode]
 
 Prints ``name,us_per_call,derived`` CSV rows.  The segserve, autotune,
-gateway and fabric sections also write machine-readable
+gateway, fabric and specdecode sections also write machine-readable
 ``BENCH_segserve.json`` / ``BENCH_autotune.json`` /
-``BENCH_gateway.json`` / ``BENCH_fabric.json`` for the bench tracker
+``BENCH_gateway.json`` / ``BENCH_fabric.json`` /
+``BENCH_specdecode.json`` for the bench tracker
 (``scripts/bench_diff.py`` diffs them across revisions).  ``replay`` is
 the open-loop trace-replay bench — an alias for the gateway section,
 which replays the committed canonical trace ``traces/gateway_burst.json``
@@ -21,7 +22,6 @@ the cost-per-SLO frontier to ``BENCH_capacity.json``.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -57,9 +57,6 @@ def main() -> None:
     args = ap.parse_args()
 
     rows: list[tuple[str, float, str]] = []
-    sections = {
-        "msdf": msdf_rows,
-    }
     if args.section in ("all", "msdf"):
         rows += msdf_rows()
     if args.section in ("all", "table1"):
@@ -98,6 +95,10 @@ def main() -> None:
         from benchmarks import capacity
 
         rows += capacity.run()
+    if args.section in ("all", "specdecode"):
+        from benchmarks import specdecode
+
+        rows += specdecode.run()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,0 +1,399 @@
+"""Precision-speculative decoding benchmark — ``BENCH_specdecode.json``.
+
+One model, two precisions: MSDF truncation makes a low-plane "draft"
+forward a cheap prefix of the full-digit compute (same weights, same KV
+cache, same kernels — ``repro.serve.specdecode``).  This bench measures
+the modeled decode-throughput win of speculating under a truncated-plane
+schedule and verifying with the certified full-digit schedule, and gates
+the property that makes the mode safe to ship:
+
+1. **Token identity** — for every prompt, the speculative engine's
+   emitted stream must be *bit-identical* to a plain greedy engine's on
+   the same weights and schedule.  Both run the digit-serial int8
+   datapath (integer accumulation is associative, per-row activation
+   scales keep slots isolated), so this is an exact equality gate, not a
+   tolerance.
+2. **Throughput** — modeled decode cycles per emitted token, with every
+   draft and verify cycle charged (wasted speculation included), must
+   beat the non-speculative baseline by ``MIN_SPEEDUP``x.  The baseline
+   is priced exactly: one full-digit step per token.
+3. **Cycle accounting** — per round, ``useful + wasted`` cycles from
+   :func:`repro.core.cycle_model.lm_spec_step_cycles` must sum
+   *integer-exactly* to the round's total.
+4. **Serving integration** — the headline operating point is served
+   through :class:`repro.serve.Gateway` behind
+   :class:`~repro.serve.specdecode.SpecLMAdapter` with a
+   :mod:`repro.obs` ``RecordingSink``: the run raises unless exec
+   attribution reconciles integer-exactly with
+   ``RoundClock.worked_total`` and the draft / verify / accept lifecycle
+   events are present (rollback events are counted; they may be zero at
+   full acceptance).
+
+The operating point comes from :func:`repro.autotune.api.tune_spec`
+extending a pinned full-digit LM plan (schema v3 ``spec_planes`` /
+``spec_k``) — the bench exercises the real tuning path, trimmed to a
+small grid for runtime.
+
+The model is the smoke transformer deepened to ``N_LAYERS`` with tied
+embeddings sharpened into a token attractor (greedy decode repeats its
+input with a wide logit margin), so draft acceptance is high and
+platform-stable — the throughput gate measures the *pricing*, not a
+coin-flip acceptance rate.  ``scripts/bench_diff.py`` diffs the headline
+speedup against the committed baseline at the merge-base.
+
+    PYTHONPATH=src python -m benchmarks.run --section specdecode
+"""
+from __future__ import annotations
+
+import json
+
+N_LAYERS = 8  # deep enough that one pipeline interval << one full step
+VOCAB = 128  # == d_model, so the tied identity table reads channels out
+EMBED_SHARPEN = 64.0  # token-attractor gain on the tied embedding table
+BATCH = 4
+MAX_SEQ = 48
+MAX_NEW = 24
+N_PROMPTS = 6
+PROMPT_LEN = 4
+MIN_SPEEDUP = 1.5
+ROUND_BUDGET = 100_000_000
+# trimmed tune_spec grid: 2 draft budgets x 2 depths keeps the bench's
+# jit-compile count (one draft executable per distinct budget) small
+PLANE_CANDIDATES = (2, 4)
+K_CANDIDATES = (2, 4)
+
+
+def _build_model():
+    """The bench transformer: smoke config deepened + tied embeddings
+    replaced by a scaled identity — a structural repeat-the-token
+    attractor."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import models
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config("minitron_4b").replace(
+        n_layers=N_LAYERS, tie_embeddings=True, vocab=VOCAB
+    )
+    params = models.build(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    # With ``vocab == d_model`` and the tied table a scaled identity,
+    # embedding token X injects ``EMBED_SHARPEN`` into residual channel X
+    # and the unembed reads the residual stream back out verbatim —
+    # ``logits = EMBED_SHARPEN * residual``.  The injected channel
+    # dominates every block's bounded (RMS-normed) output, so greedy
+    # repeats its input token with a *relative* top-1 margin far wider
+    # than any draft schedule's truncation error (which is a fixed
+    # fraction of the per-row amax — scale-invariant, so the margin has
+    # to be structural, not just large).
+    params = dict(params)
+    params["embed"] = {
+        "table": (jnp.eye(VOCAB, cfg.d_model, dtype=jnp.float32)
+                  * EMBED_SHARPEN).astype(jnp.bfloat16)
+    }
+    return cfg, params
+
+
+def _pinned_plan(cfg, params):
+    """A pinned full-digit LM plan (certified by construction — zero
+    truncation error at 8 planes) for ``tune_spec`` to extend.  The
+    params fingerprint binds it to the served weights so the gateway's
+    admission check passes honestly."""
+    from repro.autotune.calibrate import params_fingerprint
+    from repro.autotune.plan import TunedPlan
+
+    return TunedPlan(
+        workload="lm",
+        geometry=dict(family=cfg.family, n_layers=cfg.n_layers,
+                      d_model=cfg.d_model),
+        planes=(8,) * cfg.n_layers,
+        target_rel_err=0.05,
+        certificate=dict(
+            cert=0.0, note="pinned full-digit bench plan (exact by "
+            "construction: no planes truncated)",
+        ),
+        fingerprint="bench-pinned-" + "0" * 51,
+        params_fingerprint=params_fingerprint(params),
+    )
+
+
+def _prompts(vocab):
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    return [
+        rng.integers(0, vocab, size=PROMPT_LEN).astype(np.int32)
+        for _ in range(N_PROMPTS)
+    ]
+
+
+def _run_greedy(qcfg, params, prompts):
+    """Non-speculative reference: token streams + exact modeled cycles
+    (one full-digit step per emitted token)."""
+    from repro.serve.engine import Engine, Request
+
+    eng = Engine(qcfg, params, batch=BATCH, max_seq=MAX_SEQ)
+    pending = [
+        Request(rid=i, prompt=p, max_new=MAX_NEW)
+        for i, p in enumerate(prompts)
+    ]
+    reqs = list(pending)
+    while pending or eng.ready_slots():
+        while pending and eng.admit(pending[0]):
+            pending.pop(0)
+        if not eng.ready_slots():
+            break
+        eng.step()
+    return [list(r.out) for r in reqs]
+
+
+def _run_spec(qcfg, params, prompts, *, draft_schedule, k, full_step,
+              spec_price):
+    """Speculative run: token streams + the full cycle ledger (draft,
+    verify, useful, wasted — every round priced before acceptance is
+    known, exactly as the serving adapter charges it)."""
+    from repro.serve.engine import Request
+    from repro.serve.specdecode import SpecEngine
+
+    eng = SpecEngine(qcfg, params, batch=BATCH, max_seq=MAX_SEQ,
+                     draft_schedule=draft_schedule, k=k)
+    pending = [
+        Request(rid=i, prompt=p, max_new=MAX_NEW)
+        for i, p in enumerate(prompts)
+    ]
+    reqs = list(pending)
+    ledger = dict(cycles=0, useful=0, wasted=0, emitted=0, accepted=0,
+                  drafted=0, rounds=0, greedy_rounds=0)
+    while pending or eng.ready_slots():
+        while pending and eng.admit(pending[0]):
+            pending.pop(0)
+        slots = eng.ready_slots()
+        if not slots:
+            break
+        _, rec = eng.spec_step()
+        if rec is None:  # no speculation headroom: plain greedy round
+            ledger["cycles"] += full_step * len(slots)
+            ledger["useful"] += full_step * len(slots)
+            ledger["emitted"] += len(slots)
+            ledger["greedy_rounds"] += 1
+            continue
+        ledger["rounds"] += 1
+        for s in rec["slots"]:
+            acct = spec_price(k=rec["k"], accepted=s["accepted"])
+            if acct["useful_cycles"] + acct["wasted_cycles"] \
+                    != acct["total_cycles"]:
+                raise RuntimeError(
+                    f"spec cycle account does not close: useful "
+                    f"{acct['useful_cycles']} + wasted "
+                    f"{acct['wasted_cycles']} != total "
+                    f"{acct['total_cycles']}"
+                )
+            ledger["cycles"] += acct["total_cycles"]
+            ledger["useful"] += acct["useful_cycles"]
+            ledger["wasted"] += acct["wasted_cycles"]
+        ledger["emitted"] += rec["emitted"]
+        ledger["accepted"] += rec["accepted"]
+        ledger["drafted"] += rec["drafted"]
+    return [list(r.out) for r in reqs], ledger
+
+
+def _serve_through_gateway(qcfg, params, plan, prompts):
+    """The serving-integration leg: the tuned operating point behind the
+    gateway, with the telemetry reconcile gate live."""
+    from repro.obs import RecordingSink, assemble, breakdown, reconcile
+    from repro.serve import Gateway, SpecLMAdapter
+
+    sink = RecordingSink()
+    gw = Gateway(
+        [SpecLMAdapter(qcfg, params, batch=BATCH, max_seq=MAX_SEQ,
+                       plan=plan)],
+        policy="fair",
+        round_budget=ROUND_BUDGET,
+        sink=sink,
+    )
+    for p in prompts:
+        gw.submit("lm", p, max_new=MAX_NEW)
+    gw.drain()
+    rec = reconcile(sink.events, [gw.round_clock])
+    if not rec["holds"]:
+        raise RuntimeError(
+            f"span execution attribution does not reconcile with the "
+            f"round clock: {rec['total_exec']} exec-event cycles vs "
+            f"{rec['total_worked']} worked cycles"
+        )
+    etypes: dict[str, int] = {}
+    for ev in sink.events:
+        etypes[ev.etype] = etypes.get(ev.etype, 0) + 1
+    for required in ("draft", "verify", "accept"):
+        if not etypes.get(required):
+            raise RuntimeError(
+                f"speculative lifecycle event {required!r} missing from "
+                f"the gateway telemetry stream (saw {sorted(etypes)})"
+            )
+    streams = [list(g.handle.out) for g in gw.requests]
+    return dict(
+        rounds=gw.rounds,
+        clock_cycles=gw.clock,
+        total_ops=sum(a.total_ops for a in gw.adapters.values()),
+        events=len(sink.events),
+        spec_events={e: etypes.get(e, 0)
+                     for e in ("draft", "verify", "accept", "rollback")},
+        spans=breakdown(assemble(sink.events)),
+        reconcile=rec,
+    ), streams
+
+
+def run(*, json_path: str | None = "BENCH_specdecode.json"
+        ) -> list[tuple[str, float, str]]:
+    import functools
+
+    from repro.autotune.api import apply_plan_lm, tune_spec
+    from repro.core import cycle_model as cm
+
+    cfg, params = _build_model()
+    base_plan = _pinned_plan(cfg, params)
+    prompts = _prompts(cfg.vocab)
+
+    # --- tune: the real search, on a trimmed grid ------------------------
+    plan = tune_spec(
+        params, cfg, prompts[:2], plan=base_plan,
+        batch=BATCH, max_seq=MAX_SEQ, max_new=8,
+        k_candidates=K_CANDIDATES, plane_candidates=PLANE_CANDIDATES,
+    )
+    draft_schedule = plan.spec_planes
+    k = plan.spec_k
+
+    qcfg = apply_plan_lm(cfg, plan)
+    kw = dict(
+        n_heads=cfg.n_heads, head_dim=cfg.hd, n_kv_heads=cfg.n_kv_heads,
+        context=MAX_SEQ, n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+    )
+    full_step = cm.lm_step_cycles(
+        cfg.d_model, cfg.d_ff, cfg.n_layers, tuple(plan.planes), **kw
+    )
+    spec_price = functools.partial(
+        cm.lm_spec_step_cycles, cfg.d_model, cfg.d_ff, cfg.n_layers,
+        draft_schedule=draft_schedule, schedule=tuple(plan.planes), **kw
+    )
+
+    # --- headline: speculative vs greedy, engine level -------------------
+    greedy_streams = _run_greedy(qcfg, params, prompts)
+    spec_streams, ledger = _run_spec(
+        qcfg, params, prompts, draft_schedule=draft_schedule, k=k,
+        full_step=full_step, spec_price=spec_price,
+    )
+
+    # Gate 1: bit-identical emitted streams.
+    if spec_streams != greedy_streams:
+        bad = [i for i, (a, b) in
+               enumerate(zip(spec_streams, greedy_streams)) if a != b]
+        raise RuntimeError(
+            f"speculative decode diverged from greedy on prompt(s) {bad}: "
+            f"acceptance must be an exact-prefix property, never a "
+            f"numerics coin flip"
+        )
+
+    # Gate 2: modeled decode throughput.
+    baseline_cycles = ledger["emitted"] * full_step
+    speedup = baseline_cycles / ledger["cycles"]
+    if speedup < MIN_SPEEDUP:
+        raise RuntimeError(
+            f"speculative decode speedup {speedup:.3f}x under the "
+            f"{MIN_SPEEDUP}x gate (draft@{list(draft_schedule)} k={k}, "
+            f"acceptance {ledger['accepted']}/{ledger['drafted']})"
+        )
+
+    accept_rate = (ledger["accepted"] / ledger["drafted"]
+                   if ledger["drafted"] else 0.0)
+
+    # --- serving integration: gateway + telemetry gates ------------------
+    served, served_streams = _serve_through_gateway(
+        qcfg, params, plan, prompts
+    )
+    if served_streams != greedy_streams:
+        raise RuntimeError(
+            "gateway-served speculative streams diverged from greedy — "
+            "adapter chunking must not change what is computed"
+        )
+
+    rows = [
+        (
+            "specdecode/greedy",
+            ledger["emitted"] * full_step / 100.0,  # modeled us @ 100 MHz
+            f"tokens={ledger['emitted']};cycles_per_tok={full_step}",
+        ),
+        (
+            "specdecode/spec",
+            ledger["cycles"] / 100.0,
+            f"tokens={ledger['emitted']};speedup={speedup:.3f};"
+            f"accept={accept_rate:.3f};k={k};"
+            f"planes={draft_schedule[0]};wasted={ledger['wasted']}",
+        ),
+        (
+            "specdecode/gateway",
+            served["clock_cycles"] / 100.0,
+            f"rounds={served['rounds']};events={served['events']};"
+            f"accepts={served['spec_events']['accept']};"
+            f"rollbacks={served['spec_events']['rollback']}",
+        ),
+    ]
+
+    if json_path:
+        payload = dict(
+            bench="specdecode",
+            model=dict(
+                name=cfg.name, n_layers=cfg.n_layers, d_model=cfg.d_model,
+                vocab=cfg.vocab, tie_embeddings=cfg.tie_embeddings,
+                embed_sharpen=EMBED_SHARPEN,
+            ),
+            geometry=dict(batch=BATCH, max_seq=MAX_SEQ, max_new=MAX_NEW,
+                          n_prompts=N_PROMPTS, prompt_len=PROMPT_LEN),
+            plan=dict(
+                planes=list(plan.planes),
+                spec_planes=list(plan.spec_planes),
+                spec_k=plan.spec_k,
+                version=plan.version,
+                tune_grid=plan.modeled["spec"]["grid"],
+            ),
+            ledger=ledger,
+            gateway=dict(
+                rounds=served["rounds"],
+                clock_cycles=served["clock_cycles"],
+                total_ops=served["total_ops"],
+                events=served["events"],
+                spec_events=served["spec_events"],
+            ),
+            # top-level spans block in the gateway-bench shape, so the
+            # ledger report renders the breakdown + reconcile verdict
+            spans=dict(
+                per_class=served["spans"],
+                reconcile=served["reconcile"],
+                events=served["events"],
+            ),
+            gate=dict(
+                min_speedup=MIN_SPEEDUP,
+                speedup=speedup,
+                accept_rate=accept_rate,
+                baseline_cycles=int(baseline_cycles),
+                spec_cycles=int(ledger["cycles"]),
+                wasted_cycles=int(ledger["wasted"]),
+                token_identical=True,  # gated above (raise on mismatch)
+                gateway_token_identical=True,
+                cycle_account_closes=True,
+                holds=bool(speedup >= MIN_SPEEDUP),
+            ),
+        )
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_specdecode.json")
+    args = ap.parse_args()
+    for name, us, derived in run(json_path=args.json):
+        print(f"{name},{us:.1f},{derived}")

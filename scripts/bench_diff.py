@@ -58,6 +58,7 @@ DEFAULT_FILES = (
     "BENCH_gateway.json",
     "BENCH_fabric.json",
     "BENCH_capacity.json",
+    "BENCH_specdecode.json",
 )
 
 
@@ -144,6 +145,24 @@ def comparable_rows(payload: dict):
                 metrics["minority_p99_ms"] = pc["interactive"]["p99_ms"]
             yield f"cap:{r['label']}", target, metrics
         return
+    if bench == "specdecode":
+        # comparable only on the same engineered model, geometry and
+        # tuned operating point: a different attractor, depth or draft
+        # schedule is a different frontier — skipped, never failed
+        model = payload["model"]
+        geom = payload["geometry"]
+        plan = payload["plan"]
+        target = (
+            f"{model['name']}xL{model['n_layers']}"
+            f"@g{model['embed_sharpen']:g}"
+            f";k{plan['spec_k']}@p{plan['spec_planes'][0]}"
+            f";new{geom['max_new']}x{geom['n_prompts']}"
+        )
+        gate = payload["gate"]
+        yield "spec", target, dict(
+            speedup=gate["speedup"], accept_rate=gate["accept_rate"]
+        )
+        return
     file_target = payload.get("target_rel_err")
     for r in payload.get("rows", []):
         target = r.get("target_rel_err", file_target)
@@ -168,11 +187,26 @@ def diff_file(path: str, base: dict | None, new: dict | None,
         return entries
     if base is None:
         entry("note", "*", "presence", note="no baseline at merge-base "
-              "(new bench) — nothing to diff")
+              "(new bench target) — nothing to diff, skipping")
         return entries
 
-    base_rows = {(rid, tgt): m for rid, tgt, m in comparable_rows(base)}
-    new_rows = {(rid, tgt): m for rid, tgt, m in comparable_rows(new)}
+    # A baseline payload can predate the bench's current schema (the
+    # merge-base was committed before this target grew a field the
+    # normalizer now indexes).  That is a target change, not a frontier
+    # regression — and emphatically not a tracker crash.
+    try:
+        base_rows = {(rid, tgt): m for rid, tgt, m in comparable_rows(base)}
+    except KeyError as e:
+        entry("warning", "*", "schema", note=f"baseline payload missing "
+              f"key {e} (schema predates this bench's shape) — skipped")
+        return entries
+    try:
+        new_rows = {(rid, tgt): m for rid, tgt, m in comparable_rows(new)}
+    except KeyError as e:
+        entry("regression", "*", "schema", note=f"freshly generated "
+              f"payload missing key {e} — the bench no longer emits what "
+              f"the tracker diffs")
+        return entries
     base_ids = {rid for rid, _ in base_rows}
     for (rid, tgt), nm in sorted(new_rows.items(), key=lambda kv: str(kv[0])):
         if (rid, tgt) not in base_rows:
@@ -209,6 +243,17 @@ def diff_file(path: str, base: dict | None, new: dict | None,
             entry(status, rid, "cert", b_c, n_c,
                   note=note + (" — certificate loosened"
                                if status == "regression" else ""))
+        b_s, n_s = bm.get("speedup"), nm.get("speedup")
+        if b_s and n_s is not None:
+            drop = (b_s - n_s) / b_s
+            status = "regression" if drop > gops_w_tol else "ok"
+            entry(status, rid, "speedup", b_s, n_s,
+                  note=f"{-drop:+.1%} at target {tgt}")
+        b_a, n_a = bm.get("accept_rate"), nm.get("accept_rate")
+        if b_a and n_a is not None:
+            shift = (n_a - b_a) / b_a
+            entry("warning" if shift < -0.05 else "ok", rid,
+                  "accept_rate", b_a, n_a, note=f"{shift:+.1%}")
         b_p, n_p = bm.get("minority_p99_ms"), nm.get("minority_p99_ms")
         if b_p and n_p is not None:
             shift = (n_p - b_p) / b_p
@@ -312,6 +357,16 @@ def headline_metrics(payload: dict) -> dict | None:
             return dict(target=target, gops_w=pt.get("gops_w"), cert=None,
                         min_shards=pt.get("min_shards"),
                         uniform_min_shards=uniform)
+    if bench == "specdecode":
+        try:
+            rid, target, metrics = next(iter(comparable_rows(payload)))
+        except (KeyError, StopIteration):
+            return None
+        gate = payload.get("gate", {})
+        return dict(target=target, gops_w=None, cert=None,
+                    speedup=metrics.get("speedup"),
+                    accept_rate=metrics.get("accept_rate"),
+                    wasted_cycles=gate.get("wasted_cycles"))
     best = max((r for r in rows if r.get("gops_w")),
                key=lambda r: r["gops_w"], default=None)
     if best:
@@ -375,6 +430,15 @@ def update_ledger(path: str, files, *, gops_w_tol: float) -> list[dict]:
             status = "regression" if drop > gops_w_tol else "ok"
             entries.append(dict(file=path, row=bench, metric="ledger",
                                 status=status, base=b_g, new=n_g,
+                                note=f"{-drop:+.1%} vs previous ledger "
+                                     f"entry"))
+        b_s, n_s = prev.get("speedup"), hm.get("speedup")
+        if b_s and n_s is not None:
+            drop = (b_s - n_s) / b_s
+            status = "regression" if drop > gops_w_tol else "ok"
+            entries.append(dict(file=path, row=bench,
+                                metric="ledger:speedup", status=status,
+                                base=b_s, new=n_s,
                                 note=f"{-drop:+.1%} vs previous ledger "
                                      f"entry"))
     history.append(dict(revision=revision, date=date, benches=benches))

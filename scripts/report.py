@@ -36,6 +36,7 @@ DEFAULT_BENCHES = (
     "BENCH_gateway.json",
     "BENCH_fabric.json",
     "BENCH_capacity.json",
+    "BENCH_specdecode.json",
 )
 
 

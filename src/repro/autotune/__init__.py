@@ -25,6 +25,7 @@ from .api import (  # noqa: F401
     engine_from_plan,
     reference_plan,
     tune_lm,
+    tune_spec,
     tune_unet,
 )
 from .calibrate import (  # noqa: F401

@@ -398,6 +398,112 @@ def tune_lm(
     )
 
 
+def tune_spec(
+    params,
+    cfg,
+    prompts,
+    *,
+    plan: TunedPlan,
+    batch: int = 2,
+    max_seq: int = 64,
+    max_new: int = 16,
+    k_candidates: tuple[int, ...] = (2, 3, 4),
+    plane_candidates: tuple[int, ...] = (2, 4, 6),
+    mode: str = "pipelined",
+) -> TunedPlan:
+    """Search the speculative operating point (draft plane budget, depth
+    ``k``) that maximizes *accepted tokens per modeled cycle*, and record
+    it on an existing certified LM plan (schema v3: ``spec_planes`` /
+    ``spec_k``).
+
+    Each candidate runs the real :class:`~repro.serve.specdecode.SpecEngine`
+    on the calibration ``prompts`` — acceptance rate is a property of the
+    served weights and the draft schedule, not something the cycle model
+    can predict — and every round is priced with
+    :func:`repro.core.cycle_model.lm_spec_step_cycles` (wasted speculation
+    included), so the score is the same honest account the serving ledger
+    keeps.  The verify schedule is the plan's certified ``planes``; the
+    certificate is untouched because verification runs it end to end —
+    speculation changes *when* tokens are computed, never their values.
+    """
+    from repro.serve.engine import Request
+    from repro.serve.specdecode import SpecEngine
+
+    if plan.workload != "lm":
+        raise ValueError("tune_spec extends an LM plan")
+    qcfg = apply_plan_lm(cfg, plan)
+    full_sched = tuple(plan.planes)
+    kw = dict(
+        n_heads=cfg.n_heads, head_dim=cfg.hd, n_kv_heads=cfg.n_kv_heads,
+        context=max_seq, n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+    )
+    full_step = cm.lm_step_cycles(
+        cfg.d_model, cfg.d_ff, cfg.n_layers, full_sched, mode=mode, **kw
+    )
+    prompts = [np.asarray(p, np.int32) for p in prompts]
+
+    def run(draft_sched, k):
+        eng = SpecEngine(
+            qcfg, params, batch=batch, max_seq=max_seq,
+            draft_schedule=draft_sched, k=k,
+        )
+        pending = [
+            Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)
+        ]
+        cycles = emitted = accepted = drafted = 0
+        while pending or eng.ready_slots():
+            while pending and eng.admit(pending[0]):
+                pending.pop(0)
+            slots = eng.ready_slots()
+            if not slots:
+                break
+            _, rec = eng.spec_step()
+            if rec is None:  # no speculation headroom: plain greedy round
+                cycles += full_step * len(slots)
+                emitted += len(slots)
+                continue
+            sc = cm.lm_spec_step_cycles(
+                cfg.d_model, cfg.d_ff, cfg.n_layers,
+                k=rec["k"], draft_schedule=draft_sched,
+                schedule=full_sched, mode=mode, **kw,
+            )
+            cycles += sc["total_cycles"] * len(rec["slots"])
+            emitted += rec["emitted"]
+            accepted += rec["accepted"]
+            drafted += rec["drafted"]
+        return dict(
+            cycles=int(cycles), emitted=int(emitted),
+            accepted=int(accepted), drafted=int(drafted),
+            tokens_per_cycle=emitted / cycles if cycles else 0.0,
+        )
+
+    grid = []
+    for p in plane_candidates:
+        draft_sched = (int(p),) * cfg.n_layers
+        for k in k_candidates:
+            r = run(draft_sched, int(k))
+            grid.append(dict(planes=int(p), k=int(k), **r))
+    best = max(grid, key=lambda r: r["tokens_per_cycle"])
+    return dataclasses.replace(
+        plan,
+        spec_planes=(int(best["planes"]),) * cfg.n_layers,
+        spec_k=int(best["k"]),
+        modeled=dict(
+            plan.modeled,
+            spec=dict(
+                grid=grid,
+                best=dict(planes=best["planes"], k=best["k"]),
+                # modeled decode speedup at the measured acceptance rate:
+                # tokens-per-cycle relative to one full step per token
+                speedup=best["tokens_per_cycle"] * full_step,
+                mode=mode,
+            ),
+        ),
+        version=max(int(plan.version), 3),
+    )
+
+
 def apply_plan_lm(cfg, plan: TunedPlan):
     """Install an LM plan into an ``ArchConfig`` (rides the layer scan as
     data via ``quant.plane_schedule``, same as the serving engine)."""

@@ -36,7 +36,10 @@ from repro.core.plane_schedule import PlaneSchedule
 # v2: + params_fingerprint (weights-only binding, verified at gateway
 # admission).  v1 plans load with it as None — unverifiable, so the gateway
 # treats them as stale.
-PLAN_VERSION = 2
+# v3: + spec_planes/spec_k (the tune_spec operating point for
+# precision-speculative decode).  v1/v2 plans load with both as None —
+# speculation simply stays off.
+PLAN_VERSION = 3
 
 
 def _opt_tuple(v, conv=float):
@@ -68,6 +71,8 @@ class TunedPlan:
     class_planes: tuple[tuple[int, ...], ...] | None = None
     layer_gain: tuple[float, ...] | None = None
     modeled: dict = field(default_factory=dict)
+    spec_planes: tuple[int, ...] | None = None
+    spec_k: int | None = None
     version: int = PLAN_VERSION
 
     def __post_init__(self):
@@ -104,6 +109,23 @@ class TunedPlan:
                     raise ValueError(
                         "every class schedule must cover every layer"
                     )
+        if (self.spec_planes is None) != (self.spec_k is None):
+            raise ValueError("spec_planes and spec_k must be set together")
+        if self.spec_planes is not None:
+            if self.workload != "lm":
+                raise ValueError("speculative fields are lm-only")
+            if len(self.spec_planes) != len(self.planes):
+                raise ValueError(
+                    f"spec schedule covers {len(self.spec_planes)} layers, "
+                    f"plan has {len(self.planes)}"
+                )
+            for b in self.spec_planes:
+                if not (1 <= int(b) <= N_BITS):
+                    raise ValueError(
+                        f"spec plane count {b} outside 1..{N_BITS}"
+                    )
+            if int(self.spec_k) < 1:
+                raise ValueError(f"spec_k {self.spec_k} < 1")
         if self.workload == "unet":
             if self.tile is None or self.halo is None:
                 raise ValueError("a unet plan needs tile and halo")
@@ -192,6 +214,8 @@ class TunedPlan:
             ),
             layer_gain=_opt_tuple(d.get("layer_gain")),
             modeled=dict(d.get("modeled") or {}),
+            spec_planes=_opt_tuple(d.get("spec_planes"), int),
+            spec_k=None if d.get("spec_k") is None else int(d["spec_k"]),
             version=version,
         )
 
@@ -220,4 +244,8 @@ class TunedPlan:
             parts.append(f"tile={self.tile}(halo {self.halo})")
         if self.class_thresholds is not None:
             parts.append(f"classes={len(self.class_thresholds)}")
+        if self.spec_planes is not None:
+            parts.append(
+                f"spec=k{self.spec_k}@{list(self.spec_planes)}"
+            )
         return " ".join(parts)

@@ -29,7 +29,6 @@ import threading
 from pathlib import Path
 
 import jax
-import ml_dtypes
 import numpy as np
 
 # numpy can't serialize ml_dtypes (bfloat16, fp8, ...): store the raw bits as

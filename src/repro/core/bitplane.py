@@ -20,7 +20,6 @@ activations are post-ReLU) — while supporting signed LM activations exactly.
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
@@ -51,7 +50,6 @@ def decompose(x: jax.Array, *, n_bits: int = N_BITS, signed: bool = True) -> jax
 
 def recombine(planes: jax.Array, *, signed: bool = True) -> jax.Array:
     """Inverse of :func:`decompose` (Horner, MSB first)."""
-    n_bits = planes.shape[0]
 
     def body(acc, plane):
         return acc * 2 + plane.astype(jnp.int32), None

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import functools
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 # ---- paper constants -------------------------------------------------------
 N_BITS = 8
@@ -336,6 +336,103 @@ def lm_step_ops(d_model: int, d_ff: int, n_layers: int, **attn_kw) -> int:
     return n_layers * sum(
         l.ops() for l in lm_block_layers(d_model, d_ff, **attn_kw)
     )
+
+
+def lm_layer_cycles(
+    d_model: int, d_ff: int, n_layers: int, schedule=None, *,
+    mode: str = "pipelined", **attn_kw,
+) -> list[int]:
+    """Per-layer relation-(2) cycles of one decode step under a plane
+    schedule — the itemization :func:`lm_step_cycles` sums.  The maximum
+    entry is the layer-pipeline initiation interval of a multi-token pass
+    whose inputs are known in advance (:func:`lm_spec_step_cycles`)."""
+    planes = (
+        (N_BITS,) * n_layers if schedule is None
+        else tuple(int(b) for b in schedule)
+    )
+    specs = lm_block_layers(d_model, d_ff, **attn_kw)
+    return [
+        sum(
+            spec.cycles(
+                tile_cycles=schedule_tile_cycles(
+                    _planes_for(planes, l), mode=mode
+                )
+            )
+            for spec in specs
+        )
+        for l in range(n_layers)
+    ]
+
+
+# ---- speculative decode pricing --------------------------------------------
+#
+# The precision-speculative engine (repro.serve.specdecode) runs each decode
+# round in two passes: a k-token *draft* chain under a truncated-plane
+# schedule (greedy feedback — token t+1 needs token t's logits, so the k
+# steps serialize at the draft schedule's step price), then one *verify*
+# pass of the k+1 now-known tokens through the full-digit schedule.  The
+# verify tokens have no feedback dependency, so consecutive positions
+# pipeline through the layer stack: position t+1 enters layer l as soon as
+# position t leaves it, and the pass costs one full step plus k initiation
+# intervals (the widest layer's cycles) instead of k+1 full steps.  Only
+# the emitted (accepted + one corrected) tokens earn op credit; every cycle
+# of both passes counts toward time — rejected speculation is honest waste,
+# so GOPS/W degrades with the miss rate instead of hiding it.
+
+
+def lm_spec_step_cycles(
+    d_model: int, d_ff: int, n_layers: int, *, k: int, draft_schedule,
+    schedule=None, accepted: int | None = None, mode: str = "pipelined",
+    **attn_kw,
+) -> dict:
+    """Relation-(2) account of one speculative decode round (one slot).
+
+    ``k`` draft tokens priced at the ``draft_schedule`` step cost, one
+    layer-pipelined verify pass of ``k+1`` known tokens at the full
+    ``schedule`` (``None`` = uniform ``N_BITS``).  With ``accepted`` given
+    (0..k drafts survived verification) the account splits integer-exactly
+    into useful and wasted cycles: each rejected draft position wastes its
+    draft step plus its verify pipeline interval, and
+    ``useful + wasted == total`` always.
+    """
+    if int(k) < 0:
+        raise ValueError(f"k {k} < 0")
+    k = int(k)
+    draft_step = lm_step_cycles(
+        d_model, d_ff, n_layers, tuple(int(b) for b in draft_schedule),
+        mode=mode, **attn_kw,
+    )
+    full_step = lm_step_cycles(
+        d_model, d_ff, n_layers, schedule, mode=mode, **attn_kw
+    )
+    interval = max(
+        lm_layer_cycles(d_model, d_ff, n_layers, schedule, mode=mode,
+                        **attn_kw)
+    )
+    draft_cycles = k * draft_step
+    verify_cycles = full_step + k * interval
+    out = dict(
+        k=k,
+        draft_step_cycles=draft_step,
+        full_step_cycles=full_step,
+        interval_cycles=interval,
+        draft_cycles=draft_cycles,
+        verify_cycles=verify_cycles,
+        total_cycles=draft_cycles + verify_cycles,
+    )
+    if accepted is not None:
+        a = int(accepted)
+        if not (0 <= a <= k):
+            raise ValueError(f"accepted {a} outside 0..{k}")
+        wasted = (k - a) * (draft_step + interval)
+        out.update(
+            accepted=a,
+            tokens=a + 1,
+            wasted_cycles=wasted,
+            useful_cycles=out["total_cycles"] - wasted,
+            baseline_cycles=(a + 1) * full_step,
+        )
+    return out
 
 
 @dataclass

@@ -19,7 +19,6 @@ model zoo when ``quant.mode == 'mma_int8'``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Literal
 
 import jax
@@ -81,14 +80,18 @@ def mma_linear(
     planes: int | jax.Array = bitplane.N_BITS,
     impl: Impl = "xla",
     w_q: quant.QTensor | None = None,
+    batch_axis: int | None = None,
 ) -> jax.Array:
     """Quantized linear: float x (..., K) @ float w (K, N) -> float (..., N).
 
     The forward runs int8 through the MMA datapath; gradients flow via the
     straight-through estimator (the quantization is applied with
-    stop_gradient so training sees the float path).
+    stop_gradient so training sees the float path).  ``batch_axis`` selects
+    per-row activation scales (see :func:`quant.quantize_acts`) — the
+    serving path passes the batch axis so one slot's magnitudes never move
+    another slot's quantization grid.
     """
-    xq = quant.quantize_acts(x)
+    xq = quant.quantize_acts(x, batch_axis=batch_axis)
     wq = w_q if w_q is not None else quant.quantize_weights(w, channel_axis=-1)
     out_i32 = mma_dot(xq.values, wq.values, planes=planes, impl=impl)
     out = out_i32.astype(jnp.float32) * quant.quantized_matmul_scale(xq.scale, wq.scale)

@@ -32,9 +32,25 @@ def quantize_weights(w: jax.Array, *, channel_axis: int = -1) -> QTensor:
     return QTensor(q, scale.astype(jnp.float32))
 
 
-def quantize_acts(x: jax.Array) -> QTensor:
-    """Symmetric per-tensor dynamic int8 quantization of activations."""
-    amax = jnp.max(jnp.abs(x))
+def quantize_acts(x: jax.Array, *, batch_axis: int | None = None) -> QTensor:
+    """Symmetric dynamic int8 quantization of activations.
+
+    Default is one per-tensor scale.  ``batch_axis`` switches to one scale
+    per index along that axis (every other axis reduced) — required for
+    batched serving: with a tensor-wide amax, one batch row's activations
+    move every other row's scale, so a slot's numerics depend on who it is
+    batched with.  Per-row scales restore the slot-isolation invariant the
+    vector-index decode path documents (and speculative verify relies on:
+    the verify batch carries draft tokens in other rows, yet each row must
+    reproduce its greedy logits bit-exactly).
+    """
+    if batch_axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(
+            a for a in range(x.ndim) if a != batch_axis % x.ndim
+        )
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / INT8_MAX
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return QTensor(q, scale.astype(jnp.float32))

@@ -19,7 +19,6 @@ import threading
 import queue as queue_mod
 from dataclasses import dataclass
 
-import jax
 import numpy as np
 
 

@@ -18,10 +18,9 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 
 from repro.configs import ARCH_IDS, get_config
-from repro.configs.base import SHAPES, cells
+from repro.configs.base import cells
 from repro.launch import hlo_analysis, specs
 from repro.launch.mesh import make_production_mesh
 
@@ -248,7 +247,7 @@ def main() -> int:
             try:
                 r = run_cell(arch, shape, multi_pod=mp, quant=args.quant,
                              overrides=overrides or None)
-                p = save(r, args.tag)
+                save(r, args.tag)
                 roof = r["roofline"]
                 print(
                     f"[ok] {out_name}: compile {r['compile_s']:.1f}s+{r['probe_s']:.1f}s "

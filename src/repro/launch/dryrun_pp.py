@@ -45,7 +45,6 @@ def main():
     def pspec(path_leaf):
         return P("model") if path_leaf else P()
 
-    import jax.tree_util as jtu
 
     p_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), ab_params)
     p_sh["blocks"] = jax.tree.map(

@@ -13,7 +13,6 @@ the per-device SPMD program, so every term is *seconds per step per chip*:
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 

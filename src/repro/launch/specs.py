@@ -11,7 +11,6 @@ allocation-free stand-ins the dry-run lowers against.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

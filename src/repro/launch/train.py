@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import QuantConfig

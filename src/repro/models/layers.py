@@ -8,7 +8,6 @@ be vmapped/scanned and sharded freely.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -59,10 +58,19 @@ def linear(p: dict, x: jax.Array, quant=None) -> jax.Array:
     """
     from repro.core import quant as quant_lib
 
+    # Per-row activation scales for batched inputs: a tensor-wide amax lets
+    # one batch row's magnitudes shift every other row's quantization grid,
+    # breaking the slot-isolation invariant the serving engines document
+    # (the fused pallas epilogue takes one scale, so that path keeps the
+    # per-tensor grid).
+    batch_axis = 0 if x.ndim >= 3 else None
     if "w_q" in p:
         planes = quant.planes if quant is not None else 8
         impl = quant.impl if quant is not None else "xla"
-        xq = quant_lib.quantize_acts(x.astype(jnp.float32))
+        xq = quant_lib.quantize_acts(
+            x.astype(jnp.float32),
+            batch_axis=None if impl == "pallas" else batch_axis,
+        )
         w_scale = jnp.squeeze(p["w_scale"], axis=-2)
         if impl == "pallas":
             from repro.kernels import ops as kops
@@ -79,7 +87,7 @@ def linear(p: dict, x: jax.Array, quant=None) -> jax.Array:
         if quant is not None and quant.mode == "mma_int8":
             out = mma.mma_linear(
                 x.astype(jnp.float32), w.astype(jnp.float32), planes=quant.planes,
-                impl=quant.impl,
+                impl=quant.impl, batch_axis=batch_axis,
             ).astype(x.dtype)
         else:
             out = jax.lax.dot_general(

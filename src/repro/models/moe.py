@@ -62,7 +62,6 @@ def moe_ffn(p: dict, x: jax.Array, cfg) -> jax.Array:
     # capacity floor of 4 keeps tiny decode batches effectively dropless
     cap = min(tk, max(int(t * m.top_k / m.n_experts * m.capacity_factor), 4))
     keep = pos < cap
-    dest = jnp.where(keep, eid_s * cap + pos, tk)  # dropped -> OOB (ignored)
 
     # Dispatch: (E, C, D) buffer — E shards over 'model' (EP), C over the DP
     # axes (each data shard's tokens land in its capacity slice after the

@@ -12,7 +12,6 @@ Channel-mix: token-shift + squared-ReLU MLP (d_ff = 3.5 * d_model for the
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

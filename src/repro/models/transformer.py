@@ -9,7 +9,6 @@ frontend per the assignment) is concatenated before the token embeddings.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

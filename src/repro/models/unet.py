@@ -17,7 +17,6 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core import mma
 from repro.core.cycle_model import CALIBRATED_UNET, ConvLayerSpec, unet_conv_layers
 from repro.core.plane_schedule import PlaneSchedule
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel.sharding import constrain
-from . import layers, mamba2, transformer
+from . import layers, mamba2
 
 
 def _group_split(cfg):

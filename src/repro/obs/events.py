@@ -30,6 +30,17 @@ exec       execution attribution: ``cycles`` of micro-step      gateway
            summing ``exec`` cycles reconciles integer-exactly   adapter
            with ``RoundClock.worked_total``)                    exec logs)
 tile       one tile emission passed through the gateway         gateway
+draft      speculative round drafted ``k`` tokens per slot at   gateway
+           the truncated-plane schedule (offset-stamped at the  (from
+           end of the draft chain)                              obs logs)
+verify     speculative round verified ``k+1`` known tokens      gateway
+           through the full-digit schedule (layer-pipelined)
+accept     one slot's acceptance outcome: ``accepted`` of       gateway
+           ``k`` drafts survived, ``emitted`` tokens left the
+           round (always >= 1 — the verifier's correction)
+rollback   one slot rewound past its first draft mismatch       gateway
+           (``rejected`` draft positions discarded; their
+           cycles stay charged — wasted speculation is time)
 complete   request finished (offset-exact stamp; ``latency``    gateway
            in cycles)
 round      round closed (``spent``/``worked`` intra-round       RoundClock

@@ -71,7 +71,8 @@ def trend(entries) -> dict[str, list[dict]]:
     return series
 
 
-_LATENCY_KEYS = ("interactive_p99_ms", "seg_p99_ms", "min_shards")
+_LATENCY_KEYS = ("interactive_p99_ms", "seg_p99_ms", "min_shards",
+                 "speedup", "accept_rate")
 
 
 def _fmt(v, nd=3) -> str:
@@ -234,6 +235,44 @@ def slo_tables(payload: dict) -> str | None:
     return "\n".join(lines)
 
 
+def specdecode_table(payload: dict) -> str | None:
+    """Render the speculative-decode payload's headline: the tuned
+    operating point, its modeled speedup over non-speculative decode,
+    the measured acceptance, and the honest waste accounting."""
+    if payload.get("bench") != "specdecode":
+        return None
+    gate = payload.get("gate")
+    plan = payload.get("plan")
+    if not gate or not plan:
+        return None
+    head = ["draft planes", "k", "speedup", "gate", "accept rate",
+            "spec cycles", "baseline cycles", "wasted cycles"]
+    sp = plan.get("spec_planes") or ["?"]
+    lines = [
+        "| " + " | ".join(head) + " |",
+        "|" + "|".join("---" for _ in head) + "|",
+        "| " + " | ".join([
+            str(sp[0]), str(plan.get("spec_k")),
+            _fmt(gate.get("speedup")) + "x",
+            f">={_fmt(gate.get('min_speedup'), 1)}x "
+            + ("holds" if gate.get("holds") else "**VIOLATED**"),
+            _fmt(gate.get("accept_rate")),
+            str(gate.get("spec_cycles")), str(gate.get("baseline_cycles")),
+            str(gate.get("wasted_cycles")),
+        ]) + " |",
+    ]
+    ev = payload.get("gateway", {}).get("spec_events")
+    if ev:
+        lines.append("")
+        lines.append(
+            "Gateway lifecycle events: " + ", ".join(
+                f"{k}={ev.get(k)}" for k in
+                ("draft", "verify", "accept", "rollback")
+            ) + "."
+        )
+    return "\n".join(lines)
+
+
 def build_report(ledger_path, bench_paths) -> tuple[str, dict]:
     """Assemble the full report; returns ``(markdown, json_payload)``."""
     entries = read_ledger(ledger_path)
@@ -272,6 +311,22 @@ def build_report(ledger_path, bench_paths) -> tuple[str, dict]:
         )
         md.append("")
         md.append(table)
+        md.append("")
+
+    spec = benches.get("specdecode")
+    spec_md = specdecode_table(spec) if spec else None
+    if spec_md:
+        md.append("## Speculative decode — precision drafts, "
+                  "full-digit verify")
+        md.append("")
+        md.append(
+            "Truncated-plane drafts verified by the certified full-digit "
+            "schedule (`BENCH_specdecode.json`): modeled decode speedup "
+            "at bit-identical token streams, with every wasted "
+            "speculation cycle charged:"
+        )
+        md.append("")
+        md.append(spec_md)
         md.append("")
 
     capacity = benches.get("capacity")

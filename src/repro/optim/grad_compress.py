@@ -19,7 +19,6 @@ Exposed two ways:
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

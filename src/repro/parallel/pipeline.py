@@ -20,7 +20,6 @@ them).  Shapes: n_micro must be >= 1; batch shards over ('pod','data').
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,6 @@ import contextvars
 from typing import Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar("mesh", default=None)

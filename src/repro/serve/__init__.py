@@ -31,6 +31,8 @@ from .gateway import (  # noqa: F401
 )
 from .modeled import ModeledLMAdapter, ModeledSegAdapter, modeled_materializer  # noqa: F401
 from .queue import FifoQueue, SlotTable  # noqa: F401
+from . import specdecode  # noqa: F401
+from .specdecode import SpecEngine, SpecLMAdapter  # noqa: F401
 
 
 def __getattr__(name):

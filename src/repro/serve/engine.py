@@ -210,6 +210,13 @@ class Engine:
             logits, self.cache = self.decode_fn(
                 self.params, tok, self.cache, self._index(slot), self.extras,
             )
+            # Serialize dispatch: with several prefill calls in flight the
+            # CPU backend partitions float reductions by available
+            # concurrency, so overlapped calls produce ulp-different cache
+            # rows run to run — which greedy argmax amplifies into
+            # different tokens.  Decode steps are already serialized by
+            # their argmax feedback; this is the one unsynced loop.
+            jax.block_until_ready(logits)
             self.lengths[slot] += 1
             req.prefill_pos += 1
         if n and req.ready:

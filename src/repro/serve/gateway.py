@@ -287,17 +287,22 @@ class LMAdapter:
         self._order: list[GatewayRequest] = []  # admission order (prefill)
         self.total_ops = 0
 
-    def _build(self, cfg) -> None:
+    def _make_engine(self, cfg):
+        """Engine factory — the subclass hook (``specdecode.SpecLMAdapter``
+        builds a :class:`~repro.serve.specdecode.SpecEngine` here)."""
         from .engine import Engine
 
-        self.cfg = cfg
-        self.engine = Engine(
+        return Engine(
             cfg, self.params, batch=self._batch, max_seq=self._max_seq,
             extras=self._extras,
         )
+
+    def _build(self, cfg) -> None:
+        self.cfg = cfg
+        self.engine = self._make_engine(cfg)
         self.engine.obs = self.obs_sink or NULL_SINK
         schedule = cfg.quant.plane_schedule
-        price_kw = dict(
+        self._price_kw = price_kw = dict(
             n_heads=cfg.n_heads, head_dim=cfg.hd, n_kv_heads=cfg.n_kv_heads,
             context=self._max_seq, n_experts=cfg.moe.n_experts,
             top_k=cfg.moe.top_k,
@@ -393,44 +398,62 @@ class LMAdapter:
              soft_limit: int | None = None):
         consumed = 0
         completed: list[tuple[GatewayRequest, int]] = []
-        sc = self._step_cycles
         if self.preemptive:
-            # 1. chunked prefill, admission order: each token charged at
-            # the step price as it enters the cache; an unaffordable
-            # remainder yields to the next round instead of overdrafting
-            for greq in list(self._order):
-                if greq.done or not self._matches(greq, qos):
-                    continue
-                h = greq.handle
-                if h.prefill_remaining <= 0:
-                    continue
-                n = min((budget - consumed) // sc, h.prefill_remaining)
-                if soft_limit is not None:
-                    # tokens may start only before the segment boundary
-                    # (the last one may run across it)
-                    n_soft = -(-max(soft_limit - consumed, 0) // sc)
-                    n = min(n, n_soft)
-                if n <= 0 and force and consumed == 0:
-                    n = 1  # forced progress: one token, overdraft recorded
-                if n <= 0:
-                    break
-                force = False
-                self.engine.prefill(h, int(n))
-                consumed += n * sc
-                self.total_ops += n * self._step_ops
-                if self.obs_enabled:
-                    self.exec_log.append((greq.rid, greq.qos, n * sc,
-                                          consumed))
-                if h.prefill_remaining:
-                    break  # budget exhausted mid-prompt
-        # 2. decode steps — class-scoped under the preemptive path *when
-        # the family supports slot isolation* (the per-slot cache index:
-        # excluded rows' junk writes land at their own positions and are
-        # overwritten before read).  Recurrent/scalar-index families have
-        # no position-addressed state, so a subset step would corrupt the
-        # excluded rows — they decode every ready slot instead, charged
-        # to the invoking class.  The atomic path always decodes every
-        # ready slot (PR 4 semantics).
+            consumed, force = self._work_prefill(
+                budget, qos, force, soft_limit
+            )
+        consumed = self._work_decode(
+            budget, consumed, qos, force, soft_limit, completed
+        )
+        for greq, _ in completed:
+            if greq in self._order:
+                self._order.remove(greq)
+        return consumed, completed, []
+
+    def _work_prefill(self, budget: int, qos, force: bool, soft_limit):
+        """Chunked prefill, admission order: each token charged at the
+        step price as it enters the cache; an unaffordable remainder
+        yields to the next round instead of overdrafting."""
+        consumed = 0
+        sc = self._step_cycles
+        for greq in list(self._order):
+            if greq.done or not self._matches(greq, qos):
+                continue
+            h = greq.handle
+            if h.prefill_remaining <= 0:
+                continue
+            n = min((budget - consumed) // sc, h.prefill_remaining)
+            if soft_limit is not None:
+                # tokens may start only before the segment boundary
+                # (the last one may run across it)
+                n_soft = -(-max(soft_limit - consumed, 0) // sc)
+                n = min(n, n_soft)
+            if n <= 0 and force and consumed == 0:
+                n = 1  # forced progress: one token, overdraft recorded
+            if n <= 0:
+                break
+            force = False
+            self.engine.prefill(h, int(n))
+            consumed += n * sc
+            self.total_ops += n * self._step_ops
+            if self.obs_enabled:
+                self.exec_log.append((greq.rid, greq.qos, n * sc,
+                                      consumed))
+            if h.prefill_remaining:
+                break  # budget exhausted mid-prompt
+        return consumed, force
+
+    def _work_decode(self, budget: int, consumed: int, qos, force: bool,
+                     soft_limit, completed) -> int:
+        """Decode steps — class-scoped under the preemptive path *when
+        the family supports slot isolation* (the per-slot cache index:
+        excluded rows' junk writes land at their own positions and are
+        overwritten before read).  Recurrent/scalar-index families have
+        no position-addressed state, so a subset step would corrupt the
+        excluded rows — they decode every ready slot instead, charged
+        to the invoking class.  The atomic path always decodes every
+        ready slot (PR 4 semantics)."""
+        sc = self._step_cycles
         scoped = self.preemptive and self.engine._vector_index
         while True:
             slots = self._ready_slots(qos)
@@ -465,10 +488,7 @@ class LMAdapter:
                 for r in finished
                 if id(r) in self._inflight
             )
-        for greq, _ in completed:
-            if greq in self._order:
-                self._order.remove(greq)
-        return consumed, completed, []
+        return consumed
 
 
 class SegAdapter:
@@ -1093,6 +1113,20 @@ class Gateway:
                         dict(rid=rid, kind=kind, qos=equos, cycles=cyc),
                     ))
                 log.clear()
+            # adapter-level lifecycle annotations (the speculative engine's
+            # draft/verify/accept/rollback moments): (etype, data, offset)
+            # triples stamped exactly like exec attribution.  These carry
+            # no cycle account of their own — the exec entries do — so
+            # span reconciliation is untouched by their presence.
+            slog = getattr(adapter, "obs_log", None)
+            if slog:
+                for etype, data, off in slog:
+                    self._obs.emit(Event(
+                        self.clock + min(base + off, self.round_budget),
+                        etype,
+                        dict(kind=kind, **data),
+                    ))
+                slog.clear()
         prev_off = 0
         for item in completed:
             # protocol v3: (greq, offset) — stamp each completion at its

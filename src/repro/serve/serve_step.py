@@ -8,13 +8,11 @@ is where the paper's early-termination knob (quant.planes) meets LM serving.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro import models
-from repro.parallel import sharding as shd
 
 
 def make_prefill(cfg):

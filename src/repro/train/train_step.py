@@ -5,7 +5,7 @@ device, no mesh) and the 512-chip dry-run (mesh + NamedShardings).
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

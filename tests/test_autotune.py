@@ -422,4 +422,5 @@ def test_tune_unet_certificate_records_amortized_repair():
     from repro.autotune.calibrate import params_fingerprint
 
     assert plan.params_fingerprint == params_fingerprint(params)
-    assert plan.version == 2
+    from repro.autotune.plan import PLAN_VERSION
+    assert plan.version == PLAN_VERSION

@@ -287,3 +287,98 @@ def test_capacity_headline_is_flagship_frontier_point():
     # interactive p99 rides along as the warning-only latency metric
     rows = {rid: m for rid, _, m in bd.comparable_rows(CAPACITY)}
     assert rows["cap:uniform8/deficit-fair/s2"]["minority_p99_ms"] == 90.0
+
+
+# ----------------------------------------------------- specdecode payloads
+
+
+SPECDECODE = dict(
+    bench="specdecode",
+    model=dict(name="minitron_4b", n_layers=8, embed_sharpen=64.0),
+    geometry=dict(max_new=24, n_prompts=6),
+    plan=dict(spec_planes=[2] * 8, spec_k=4),
+    gate=dict(speedup=1.7, accept_rate=0.86, min_speedup=1.5,
+              wasted_cycles=1000, holds=True),
+)
+
+
+def test_new_bench_target_skips_with_note_not_keyerror():
+    """The satellite bugfix: a brand-new bench target — no
+    BENCH_specdecode.json at the merge-base — must read as
+    skip-with-a-note, never raise KeyError out of the tracker."""
+    entries = bd.diff_file(
+        "BENCH_specdecode.json", None, copy.deepcopy(SPECDECODE),
+        gops_w_tol=0.05, cert_tol=0.01,
+    )
+    assert not _regressions(entries)
+    assert any(e["status"] == "note" and e["metric"] == "presence"
+               for e in entries)
+
+
+def test_baseline_predating_schema_warns_not_raises():
+    """A merge-base payload missing a key the normalizer now indexes is a
+    target change (the bench's shape evolved), not a tracker crash."""
+    old = dict(bench="specdecode", gate=dict(speedup=1.2))  # no model/plan
+    entries = bd.diff_file("f", old, copy.deepcopy(SPECDECODE),
+                           gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    assert any(e["status"] == "warning" and e["metric"] == "schema"
+               for e in entries)
+    # but the freshly generated payload missing its keys is OUR bug: loud
+    entries = bd.diff_file("f", copy.deepcopy(SPECDECODE), old,
+                           gops_w_tol=0.05, cert_tol=0.01)
+    assert ("*", "schema") in _regressions(entries)
+
+
+def test_specdecode_speedup_regression_fails_and_target_change_skips():
+    entries = bd.diff_file("f", SPECDECODE, copy.deepcopy(SPECDECODE),
+                           gops_w_tol=0.05, cert_tol=0.01)
+    assert not _regressions(entries)
+    worse = copy.deepcopy(SPECDECODE)
+    worse["gate"]["speedup"] = 1.5  # -12% at the same operating point
+    assert ("spec", "speedup") in _regressions(
+        bd.diff_file("f", SPECDECODE, worse, gops_w_tol=0.05,
+                     cert_tol=0.01)
+    )
+    # a different tuned operating point is a different frontier: skipped
+    retuned = copy.deepcopy(worse)
+    retuned["plan"]["spec_k"] = 2
+    entries = bd.diff_file("f", SPECDECODE, retuned, gops_w_tol=0.05,
+                           cert_tol=0.01)
+    assert not _regressions(entries)
+    assert any(e["status"] == "skipped" for e in entries)
+
+
+def test_specdecode_acceptance_drop_warns_not_fails():
+    new = copy.deepcopy(SPECDECODE)
+    new["gate"]["accept_rate"] = 0.70  # -19%
+    entries = bd.diff_file("f", SPECDECODE, new, gops_w_tol=0.05,
+                           cert_tol=0.01)
+    assert not _regressions(entries)
+    assert any(e["status"] == "warning" and e["metric"] == "accept_rate"
+               for e in entries)
+
+
+def test_specdecode_headline_metrics():
+    hm = bd.headline_metrics(SPECDECODE)
+    assert hm["speedup"] == 1.7 and hm["accept_rate"] == 0.86
+    assert hm["gops_w"] is None and hm["wasted_cycles"] == 1000
+    assert "k4@p2" in hm["target"]
+    # a schema-less payload yields no headline rather than raising
+    assert bd.headline_metrics(dict(bench="specdecode")) is None
+
+
+def test_specdecode_ledger_trend_checks_speedup(tmp_path, monkeypatch):
+    ledger = str(tmp_path / "LEDGER.jsonl")
+    p = tmp_path / "BENCH_specdecode.json"
+    p.write_text(json.dumps(SPECDECODE))
+    entries = bd.update_ledger(ledger, [str(p)], gops_w_tol=0.05)
+    assert [e["status"] for e in entries] == ["note"]
+    monkeypatch.setattr(bd, "_git", lambda *a: "deadbeef\n")
+    worse = copy.deepcopy(SPECDECODE)
+    worse["gate"]["speedup"] = 1.4  # -18% on the same operating point
+    p.write_text(json.dumps(worse))
+    entries = bd.update_ledger(ledger, [str(p)], gops_w_tol=0.05)
+    assert [(e["metric"], e["status"]) for e in entries] == [
+        ("ledger:speedup", "regression")
+    ]

@@ -1,0 +1,350 @@
+"""Precision-speculative decoding (repro.serve.specdecode + the tune_spec
+autotune extension + the v3 plan schema).
+
+The load-bearing property is exact greedy equivalence: for any seed and
+any draft plane schedule, the speculative engine's emitted token streams
+must be bit-identical to a plain greedy engine's on the same weights and
+verify schedule — acceptance is an exact-prefix identity, never a
+tolerance.  Alongside it, the cycle model's speculative account must
+close integer-exactly (useful + wasted == total), and the serving
+adapter's charged rounds must reconcile with the gateway ledger.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.configs.base import QuantConfig
+from repro.core import cycle_model as cm
+
+BATCH = 2
+MAX_SEQ = 24
+VOCAB_SEEDED = {}
+
+# one executable per distinct draft budget — sampled from a pinned pool so
+# the property sweep compiles a handful of kernels, not one per example
+DRAFT_SCHEDULES = ((1, 1), (2, 2), (4, 4), (2, 6))
+
+
+def _cfg():
+    cfg = get_smoke_config("minitron_4b").replace(n_layers=2)
+    return cfg.replace(
+        quant=QuantConfig(mode="mma_int8", planes=8,
+                          plane_schedule=(8,) * cfg.n_layers)
+    )
+
+
+@pytest.fixture(scope="module")
+def model():
+    import jax
+
+    from repro import models
+
+    cfg = _cfg()
+    params = models.build(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(seed, vocab, n=2, length=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _drain_greedy(cfg, params, prompts, max_new):
+    from repro.serve.engine import Engine, Request
+
+    eng = Engine(cfg, params, batch=BATCH, max_seq=MAX_SEQ)
+    pending = [Request(rid=i, prompt=p, max_new=max_new)
+               for i, p in enumerate(prompts)]
+    reqs = list(pending)
+    while pending or eng.ready_slots():
+        while pending and eng.admit(pending[0]):
+            pending.pop(0)
+        if not eng.ready_slots():
+            break
+        eng.step()
+    return [list(r.out) for r in reqs]
+
+
+def _drain_spec(cfg, params, prompts, max_new, *, draft_schedule, k):
+    from repro.serve.engine import Request
+    from repro.serve.specdecode import SpecEngine
+
+    eng = SpecEngine(cfg, params, batch=BATCH, max_seq=MAX_SEQ,
+                     draft_schedule=draft_schedule, k=k)
+    pending = [Request(rid=i, prompt=p, max_new=max_new)
+               for i, p in enumerate(prompts)]
+    reqs = list(pending)
+    while pending or eng.ready_slots():
+        while pending and eng.admit(pending[0]):
+            pending.pop(0)
+        if not eng.ready_slots():
+            break
+        eng.spec_step()
+    return [list(r.out) for r in reqs], eng.spec_trace
+
+
+# --------------------------------------------------------------- identity
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    sched=st.sampled_from(DRAFT_SCHEDULES),
+    k=st.integers(min_value=1, max_value=3),
+)
+def test_speculative_decode_is_token_identical_to_greedy(seed, sched, k):
+    """For any seed and draft schedule: identical emitted streams, and the
+    spec trace's accounting is self-consistent."""
+    import jax
+
+    from repro import models
+
+    cfg = _cfg()
+    params = models.build(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(seed, cfg.vocab)
+    greedy = _drain_greedy(cfg, params, prompts, max_new=8)
+    spec, trace = _drain_spec(cfg, params, prompts, max_new=8,
+                              draft_schedule=sched, k=k)
+    assert spec == greedy
+    for rec in trace:
+        assert 1 <= rec["k"] <= k
+        for s in rec["slots"]:
+            assert 0 <= s["accepted"] <= rec["k"]
+            # emitted = accepted drafts + the verifier's correction,
+            # truncated only by the request's max_new remainder
+            assert 1 <= s["emitted"] <= s["accepted"] + 1
+        assert rec["emitted"] == sum(s["emitted"] for s in rec["slots"])
+        assert rec["accepted"] == sum(s["accepted"] for s in rec["slots"])
+        assert rec["drafted"] == rec["k"] * len(rec["slots"])
+
+
+def test_spec_engine_rejects_bad_configs(model):
+    from repro.serve.specdecode import SpecEngine
+
+    cfg, params = model
+    with pytest.raises(ValueError, match="digit-serial"):
+        SpecEngine(cfg.replace(quant=QuantConfig(mode="none")), params,
+                   batch=BATCH, max_seq=MAX_SEQ,
+                   draft_schedule=(2, 2), k=2)
+    with pytest.raises(ValueError, match="covers 1 layers"):
+        SpecEngine(cfg, params, batch=BATCH, max_seq=MAX_SEQ,
+                   draft_schedule=(2,), k=2)
+    with pytest.raises(ValueError, match="outside"):
+        SpecEngine(cfg, params, batch=BATCH, max_seq=MAX_SEQ,
+                   draft_schedule=(2, 9), k=2)
+    with pytest.raises(ValueError, match="k 0 < 1"):
+        SpecEngine(cfg, params, batch=BATCH, max_seq=MAX_SEQ,
+                   draft_schedule=(2, 2), k=0)
+
+
+# --------------------------------------------------------- cycle account
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(min_value=0, max_value=6),
+    data=st.data(),
+)
+def test_spec_cycle_account_closes_integer_exactly(k, data):
+    """useful + wasted == total for every acceptance outcome, and the
+    total decomposes exactly into k draft steps + one pipelined verify."""
+    accepted = data.draw(st.integers(min_value=0, max_value=k))
+    draft = (2, 2, 2, 2)
+    full = (8, 8, 8, 8)
+    acct = cm.lm_spec_step_cycles(
+        64, 128, 4, k=k, draft_schedule=draft, schedule=full,
+        accepted=accepted,
+    )
+    assert acct["useful_cycles"] + acct["wasted_cycles"] \
+        == acct["total_cycles"]
+    assert acct["total_cycles"] == (
+        k * acct["draft_step_cycles"] + acct["full_step_cycles"]
+        + k * acct["interval_cycles"]
+    )
+    assert acct["baseline_cycles"] == (accepted + 1) \
+        * acct["full_step_cycles"]
+    assert acct["wasted_cycles"] == (k - accepted) * (
+        acct["draft_step_cycles"] + acct["interval_cycles"]
+    )
+
+
+def test_spec_cycle_account_validates():
+    with pytest.raises(ValueError, match="accepted"):
+        cm.lm_spec_step_cycles(64, 128, 4, k=2, draft_schedule=(2,) * 4,
+                               accepted=3)
+    with pytest.raises(ValueError, match="k -1"):
+        cm.lm_spec_step_cycles(64, 128, 4, k=-1, draft_schedule=(2,) * 4)
+
+
+# ------------------------------------------------------- adapter + ledger
+
+
+def test_spec_adapter_reconciles_with_gateway_ledger(model):
+    """Serving through the gateway: every charged speculative round must
+    reconcile integer-exactly with RoundClock.worked_total, the lifecycle
+    events must be present, and the streams must still equal greedy's."""
+    from repro.obs import RecordingSink, reconcile
+    from repro.serve import Gateway, SpecLMAdapter
+
+    cfg, params = model
+    prompts = _prompts(3, cfg.vocab)
+    greedy = _drain_greedy(cfg, params, prompts, max_new=8)
+
+    sink = RecordingSink()
+    gw = Gateway(
+        [SpecLMAdapter(cfg, params, batch=BATCH, max_seq=MAX_SEQ,
+                       draft_schedule=(2, 2), k=2)],
+        round_budget=10**9, sink=sink,
+    )
+    for p in prompts:
+        gw.submit("lm", p, max_new=8)
+    gw.drain()
+    assert [list(g.handle.out) for g in gw.requests] == greedy
+
+    rec = reconcile(sink.events, [gw.round_clock])
+    assert rec["holds"], rec
+    etypes = {e.etype for e in sink.events}
+    assert {"draft", "verify", "accept"} <= etypes
+    # the draft+verify event cycles decompose the charged round prices
+    # exactly: accepted and rejected speculation both count
+    adapter = gw.adapters["lm"]
+    spec_cycles = sum(
+        e.data["cycles"] for e in sink.events
+        if e.etype in ("draft", "verify")
+    )
+    charged = sum(
+        len(r["slots"]) * adapter._spec_slot_cycles(r["k"])
+        for r in adapter.engine.spec_trace
+    )
+    assert spec_cycles == charged
+    # and the exec attribution the reconcile gate just verified contains
+    # every one of those cycles (prefill accounts for the remainder)
+    exec_cycles = sum(e.data["cycles"] for e in sink.events
+                      if e.etype == "exec")
+    assert spec_cycles <= exec_cycles == rec["total_worked"]
+
+
+def test_spec_adapter_takes_knobs_from_v3_plan(model):
+    from repro.serve import SpecLMAdapter
+
+    cfg, params = model
+    plan = _lm_plan(cfg, params, spec_planes=(2, 2), spec_k=3)
+    ad = SpecLMAdapter(cfg, params, batch=BATCH, max_seq=MAX_SEQ,
+                       plan=plan)
+    assert ad.engine.draft_schedule == (2, 2) and ad.engine.k == 3
+    with pytest.raises(ValueError, match="draft_schedule and k"):
+        SpecLMAdapter(cfg, params, batch=BATCH, max_seq=MAX_SEQ)
+
+
+# ------------------------------------------------------------ plan schema
+
+
+def _lm_plan(cfg, params, **spec_kw):
+    from repro.autotune.calibrate import params_fingerprint
+    from repro.autotune.plan import TunedPlan
+
+    return TunedPlan(
+        workload="lm",
+        geometry=dict(family=cfg.family, n_layers=cfg.n_layers,
+                      d_model=cfg.d_model),
+        planes=(8,) * cfg.n_layers,
+        target_rel_err=0.05,
+        certificate=dict(cert=0.0),
+        fingerprint="t" * 64,
+        params_fingerprint=params_fingerprint(params),
+        **spec_kw,
+    )
+
+
+def test_plan_v3_spec_fields_roundtrip(model):
+    from repro.autotune.plan import TunedPlan
+
+    cfg, params = model
+    plan = _lm_plan(cfg, params, spec_planes=(2, 2), spec_k=4)
+    back = TunedPlan.from_json(json.loads(json.dumps(plan.to_json())))
+    assert back.spec_planes == (2, 2) and back.spec_k == 4
+    assert back.version == plan.version >= 3
+    assert "spec=k4@[2, 2]" in back.describe()
+
+
+def test_plan_v2_json_loads_with_speculation_off(model):
+    """Back-compat: a v2 plan (no spec fields serialized at all) loads
+    with both as None — speculation simply stays off."""
+    from repro.autotune.plan import TunedPlan
+
+    cfg, params = model
+    d = _lm_plan(cfg, params).to_json()
+    del d["spec_planes"], d["spec_k"]
+    d["version"] = 2
+    back = TunedPlan.from_json(d)
+    assert back.spec_planes is None and back.spec_k is None
+    assert back.version == 2
+    assert "spec=" not in back.describe()
+
+
+def test_plan_spec_field_validation(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="set together"):
+        _lm_plan(cfg, params, spec_planes=(2, 2))
+    with pytest.raises(ValueError, match="set together"):
+        _lm_plan(cfg, params, spec_k=2)
+    with pytest.raises(ValueError, match="covers 1 layers"):
+        _lm_plan(cfg, params, spec_planes=(2,), spec_k=2)
+    with pytest.raises(ValueError, match="outside"):
+        _lm_plan(cfg, params, spec_planes=(0, 2), spec_k=2)
+    with pytest.raises(ValueError, match="spec_k 0 < 1"):
+        _lm_plan(cfg, params, spec_planes=(2, 2), spec_k=0)
+    with pytest.raises(ValueError, match="lm-only"):
+        dataclasses.replace(
+            _unet_plan(), spec_planes=(4,) * 5, spec_k=2
+        )
+
+
+def _unet_plan():
+    from repro.autotune.plan import TunedPlan
+
+    return TunedPlan(
+        workload="unet",
+        geometry=dict(depth=2, convs_per_stage=1),
+        planes=(4,) * 5,
+        target_rel_err=0.05,
+        certificate=dict(cert=0.01),
+        fingerprint="u" * 64,
+        tile=28,
+        halo=12,
+    )
+
+
+# ---------------------------------------------------------------- tuning
+
+
+def test_tune_spec_records_operating_point_on_plan(model):
+    """The real search on a 1x1 grid: returns a v3 plan whose spec fields
+    and modeled record come from actually running the engine."""
+    from repro.autotune import tune_spec
+
+    cfg, params = model
+    plan = _lm_plan(cfg, params)
+    tuned = tune_spec(
+        params, cfg, _prompts(11, cfg.vocab, n=1), plan=plan,
+        batch=BATCH, max_seq=MAX_SEQ, max_new=4,
+        k_candidates=(2,), plane_candidates=(2,),
+    )
+    assert tuned.spec_planes == (2, 2) and tuned.spec_k == 2
+    assert tuned.version >= 3
+    spec = tuned.modeled["spec"]
+    assert spec["best"] == dict(planes=2, k=2)
+    assert len(spec["grid"]) == 1
+    g = spec["grid"][0]
+    assert g["emitted"] >= 1 and g["cycles"] > 0
+    assert 0 <= g["accepted"] <= g["drafted"]
+    # the original plan is untouched (tune_spec extends, not mutates)
+    assert plan.spec_planes is None
+
+    with pytest.raises(ValueError, match="extends an LM plan"):
+        tune_spec(params, cfg, [], plan=_unet_plan())
