@@ -1,7 +1,7 @@
 """Benchmark harness — one section per paper table/claim.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay|fabric|capacity|specdecode]
+        [--section table1|kernels|roofline|msdf|precision|segserve|autotune|gateway|replay|fabric|capacity|energy|specdecode]
 
 Prints ``name,us_per_call,derived`` CSV rows.  The segserve, autotune,
 gateway, fabric and specdecode sections also write machine-readable
@@ -17,7 +17,10 @@ and an N-shard sharded fabric (``repro.serve.Fabric``) and gates
 scale-out p99 behavior plus exact fleet-ledger additivity.  ``capacity``
 is the SLO-driven fleet capacity planner: it streams a diurnal workload
 over a shard x router x policy x plan grid of modeled fabrics and writes
-the cost-per-SLO frontier to ``BENCH_capacity.json``.
+the cost-per-SLO frontier to ``BENCH_capacity.json``.  ``energy`` meters
+the same workload with the joule-exact :class:`repro.obs.energy`
+telemetry (plan x policy x shard grid) and writes the metered GOPS/W and
+energy-per-request frontier to ``BENCH_energy.json``.
 """
 from __future__ import annotations
 
@@ -95,6 +98,10 @@ def main() -> None:
         from benchmarks import capacity
 
         rows += capacity.run()
+    if args.section in ("all", "energy"):
+        from benchmarks import energy
+
+        rows += energy.run()
     if args.section in ("all", "specdecode"):
         from benchmarks import specdecode
 

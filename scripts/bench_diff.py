@@ -11,6 +11,9 @@ every in-revision assert and merges clean.  This script closes that hole:
   * **GOPS/W regression** — any row present in both revisions at an equal
     error target whose GOPS/W dropped by more than ``--gops-w-tol``
     (default 5%) fails the diff;
+  * **metered-energy regression** — energy-bench rows gate their metered
+    GOPS/W through the same check, and metered energy-per-request growth
+    beyond ``--gops-w-tol`` fails on its own;
   * **certificate loosening** — any certified row at an equal target whose
     certified bound grew by more than ``--cert-tol`` (default 1%) fails
     (a *larger* certified error at the same target means the tuner now
@@ -58,6 +61,7 @@ DEFAULT_FILES = (
     "BENCH_gateway.json",
     "BENCH_fabric.json",
     "BENCH_capacity.json",
+    "BENCH_energy.json",
     "BENCH_specdecode.json",
 )
 
@@ -144,6 +148,22 @@ def comparable_rows(payload: dict):
                     pc["interactive"].get("p99_ms") is not None:
                 metrics["minority_p99_ms"] = pc["interactive"]["p99_ms"]
             yield f"cap:{r['label']}", target, metrics
+        return
+    if bench == "energy":
+        # comparable only on the identical sweep + rate model: the
+        # payload's ``key`` encodes workload, grid, draft planes and the
+        # power cap, so any grid change reads as a target change —
+        # skipped, never failed.  ``gops_w`` here is the *metered*
+        # figure, so the standard regression check gates it; metered
+        # energy-per-request growth is gated by the ``epr_pj`` check.
+        target = payload.get("key")
+        for r in payload.get("rows", []):
+            metrics = dict(gops_w=r.get("metered_gops_w"),
+                           epr_pj=r.get("energy_per_request_pj"))
+            spec = r.get("spec")
+            if spec and spec.get("accept_rate") is not None:
+                metrics["accept_rate"] = spec["accept_rate"]
+            yield f"en:{r['label']}", target, metrics
         return
     if bench == "specdecode":
         # comparable only on the same engineered model, geometry and
@@ -249,6 +269,12 @@ def diff_file(path: str, base: dict | None, new: dict | None,
             status = "regression" if drop > gops_w_tol else "ok"
             entry(status, rid, "speedup", b_s, n_s,
                   note=f"{-drop:+.1%} at target {tgt}")
+        b_e, n_e = bm.get("epr_pj"), nm.get("epr_pj")
+        if b_e and n_e is not None:
+            growth = (n_e - b_e) / b_e
+            status = "regression" if growth > gops_w_tol else "ok"
+            entry(status, rid, "epr_pj", b_e, n_e,
+                  note=f"{growth:+.1%} at target {tgt}")
         b_a, n_a = bm.get("accept_rate"), nm.get("accept_rate")
         if b_a and n_a is not None:
             shift = (n_a - b_a) / b_a
@@ -357,6 +383,28 @@ def headline_metrics(payload: dict) -> dict | None:
             return dict(target=target, gops_w=pt.get("gops_w"), cert=None,
                         min_shards=pt.get("min_shards"),
                         uniform_min_shards=uniform)
+    if bench == "energy":
+        target = payload.get("key")
+        # the flagship operating point: the tuned plan under fair
+        # scheduling at the smallest fleet — the best metered GOPS/W the
+        # repo would actually run; accept-rate rides from the spec plan
+        pt = next(
+            (r for r in rows
+             if r.get("plan") == "tuned4" and r.get("policy") == "fair"),
+            rows[0] if rows else None,
+        )
+        if pt:
+            out = dict(target=target, gops_w=pt.get("metered_gops_w"),
+                       cert=None,
+                       epr_pj=pt.get("energy_per_request_pj"))
+            spec_row = next(
+                (r for r in rows if r.get("spec")
+                 and r["spec"].get("accept_rate") is not None),
+                None,
+            )
+            if spec_row:
+                out["accept_rate"] = spec_row["spec"]["accept_rate"]
+            return out
     if bench == "specdecode":
         try:
             rid, target, metrics = next(iter(comparable_rows(payload)))
@@ -439,6 +487,19 @@ def update_ledger(path: str, files, *, gops_w_tol: float) -> list[dict]:
             entries.append(dict(file=path, row=bench,
                                 metric="ledger:speedup", status=status,
                                 base=b_s, new=n_s,
+                                note=f"{-drop:+.1%} vs previous ledger "
+                                     f"entry"))
+        # speculative accept-rate is a tracked headline column, not just
+        # a pairwise warning: a drop beyond tolerance fails the trend
+        # (fewer accepted drafts means more wasted full-digit verify
+        # work — an energy regression the GOPS/W headline can mask)
+        b_a, n_a = prev.get("accept_rate"), hm.get("accept_rate")
+        if b_a and n_a is not None:
+            drop = (b_a - n_a) / b_a
+            status = "regression" if drop > gops_w_tol else "ok"
+            entries.append(dict(file=path, row=bench,
+                                metric="ledger:accept_rate", status=status,
+                                base=b_a, new=n_a,
                                 note=f"{-drop:+.1%} vs previous ledger "
                                      f"entry"))
     history.append(dict(revision=revision, date=date, benches=benches))

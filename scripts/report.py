@@ -9,7 +9,8 @@ span-breakdown tables (queued / executing / preempted decomposition of
 the exact p50/p99 requests) carried by instrumented bench payloads.
 When ``BENCH_capacity.json`` is present, the report also renders the
 cost-per-SLO capacity frontier and the per-grid-point SLO burn +
-miss-attribution tables.
+miss-attribution tables; ``BENCH_energy.json`` adds the metered-joules
+frontier and per-class joule-breakdown tables.
 
     python scripts/report.py [--ledger BENCH_LEDGER.jsonl]
                              [--benches BENCH_*.json ...]
@@ -36,6 +37,7 @@ DEFAULT_BENCHES = (
     "BENCH_gateway.json",
     "BENCH_fabric.json",
     "BENCH_capacity.json",
+    "BENCH_energy.json",
     "BENCH_specdecode.json",
 )
 

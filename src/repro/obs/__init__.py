@@ -37,6 +37,15 @@ seed and trace that produced the run.  Four pieces:
     segment (queued / preempted / service / overdraft) — the *why*
     behind a burn rate, surfaced in ``stats()`` and the reports.
 
+:mod:`repro.obs.energy`
+    Joule-exact metering: the online :class:`~repro.obs.energy
+    .EnergyMeter` sink prices the same event stream in integer
+    picojoules (:mod:`repro.core.energy_model` plane-proportional
+    rates), with per-request/class/shard/fleet attribution reconciled
+    integer-exactly, rolling :class:`~repro.obs.energy.PowerSpec` watt
+    caps on the burn-window machinery, and the speculative
+    draft/verify op-class split closing like the cycle account.
+
 :mod:`repro.obs.report`
     The ledger report generator: GOPS/W + p99 trend tables from
     ``BENCH_LEDGER.jsonl``, span-breakdown and SLO burn/attribution
@@ -59,6 +68,13 @@ from .events import (  # noqa: F401
     ShardSink,
     TeeSink,
     payload_spec,
+)
+from .energy import (  # noqa: F401
+    EnergyLedger,
+    EnergyMeter,
+    PowerSpec,
+    attach_joules,
+    find_meter,
 )
 from .slo import SloMonitor, SloSpec, find_monitor  # noqa: F401
 from .spans import Span, assemble, breakdown, reconcile  # noqa: F401

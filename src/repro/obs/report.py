@@ -20,7 +20,9 @@ Inputs are the repo's own committed CI artifacts:
     payload (``BENCH_capacity.json``) additionally yields the
     cost-per-SLO frontier table and per-grid-point SLO burn +
     miss-attribution tables (:func:`frontier_table` /
-    :func:`slo_tables`).
+    :func:`slo_tables`); the energy payload (``BENCH_energy.json``)
+    yields the metered-joules frontier and per-class joule-breakdown
+    tables (:func:`energy_tables`).
 
 Output is markdown (the CI artifact) and a JSON twin for programmatic
 consumers.  ``scripts/report.py`` is the CLI.
@@ -72,7 +74,7 @@ def trend(entries) -> dict[str, list[dict]]:
 
 
 _LATENCY_KEYS = ("interactive_p99_ms", "seg_p99_ms", "min_shards",
-                 "speedup", "accept_rate")
+                 "speedup", "accept_rate", "epr_pj")
 
 
 def _fmt(v, nd=3) -> str:
@@ -273,6 +275,66 @@ def specdecode_table(payload: dict) -> str | None:
     return "\n".join(lines)
 
 
+def energy_tables(payload: dict) -> tuple[str, str] | None:
+    """Render the energy payload (``BENCH_energy.json``) as two tables:
+    the metered frontier (metered vs analytic GOPS/W, total/idle
+    millijoules, energy per request, power-cap violations per grid
+    point) and the per-class joule breakdown (mean per-request
+    microjoules per QoS class plus the speculative draft/verify energy
+    split where the plan speculates)."""
+    if payload.get("bench") != "energy":
+        return None
+    rows = payload.get("rows")
+    if not rows:
+        return None
+    head = ["point", "metered gops_w", "analytic gops_w", "total mJ",
+            "idle mJ", "uJ/request", "cap violations"]
+    frontier = [
+        "| " + " | ".join(head) + " |",
+        "|" + "|".join("---" for _ in head) + "|",
+    ]
+    for r in rows:
+        epr = r.get("energy_per_request_pj")
+        frontier.append(
+            "| " + " | ".join([
+                str(r.get("label")),
+                _fmt(r.get("metered_gops_w")),
+                _fmt(r.get("analytic_gops_w")),
+                _fmt(r.get("total_mj"), 1),
+                _fmt(r.get("idle_mj"), 1),
+                _fmt(None if epr is None else epr * 1e-6, 1),
+                str((r.get("power") or {}).get("violations", "—")),
+            ]) + " |"
+        )
+    classes = sorted({
+        q for r in rows for q in (r.get("per_class") or {})
+    })
+    head2 = (["point"] + [f"{q} uJ/req" for q in classes]
+             + ["draft mJ", "verify mJ", "wasted mJ", "accept rate"])
+    breakdown = [
+        "| " + " | ".join(head2) + " |",
+        "|" + "|".join("---" for _ in head2) + "|",
+    ]
+    for r in rows:
+        pc = r.get("per_class") or {}
+        cells = [str(r.get("label"))]
+        for q in classes:
+            m = (pc.get(q) or {}).get("mean_request_pj")
+            cells.append(_fmt(None if m is None else m * 1e-6, 1))
+        sp = r.get("spec")
+        if sp:
+            cells += [
+                _fmt(sp.get("draft_pj", 0) * 1e-9, 1),
+                _fmt(sp.get("verify_pj", 0) * 1e-9, 1),
+                _fmt(sp.get("wasted_pj", 0) * 1e-9, 1),
+                _fmt(sp.get("accept_rate")),
+            ]
+        else:
+            cells += ["—", "—", "—", "—"]
+        breakdown.append("| " + " | ".join(cells) + " |")
+    return "\n".join(frontier), "\n".join(breakdown)
+
+
 def build_report(ledger_path, bench_paths) -> tuple[str, dict]:
     """Assemble the full report; returns ``(markdown, json_payload)``."""
     entries = read_ledger(ledger_path)
@@ -343,6 +405,33 @@ def build_report(ledger_path, bench_paths) -> tuple[str, dict]:
         md.append("")
         md.append(frontier_md)
         md.append("")
+    energy = benches.get("energy")
+    energy_md = energy_tables(energy) if energy else None
+    if energy_md:
+        frontier_t, breakdown_t = energy_md
+        md.append("## Energy frontier — metered joules")
+        md.append("")
+        md.append(
+            "Joule-exact metering (`BENCH_energy.json`): worked cycles "
+            "priced at each plan's plane-proportional pJ/cycle rate, "
+            "idle cycles at static power, speculative drafts at the "
+            "truncated draft-plane rate — vs the analytic figure that "
+            "prices every elapsed cycle at full chip power:"
+        )
+        md.append("")
+        md.append(frontier_t)
+        md.append("")
+        md.append("### Per-class joule breakdown")
+        md.append("")
+        md.append(
+            "Mean metered energy per completed request by QoS class, "
+            "with the speculative draft/verify/wasted energy split "
+            "(integer-pJ ledger, reconciled online == offline):"
+        )
+        md.append("")
+        md.append(breakdown_t)
+        md.append("")
+
     slo_md = slo_tables(capacity) if capacity else None
     if slo_md:
         md.append("## SLO burn + miss attribution per grid point")

@@ -56,6 +56,15 @@ class Span:
     deadline: int | None = None
     exec_cycles: int = 0
     n_exec: int = 0
+    #: attributed energy in integer picojoules, populated by
+    #: :func:`repro.obs.energy.attach_joules` from an armed
+    #: :class:`~repro.obs.energy.EnergyMeter` (None: no meter rode the
+    #: run — latency-only span)
+    pj: int | None = None
+
+    @property
+    def joules(self) -> float | None:
+        return None if self.pj is None else self.pj * 1e-12
 
     @property
     def done(self) -> bool:

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cycle_model as cm
+from repro.core import energy_model as em
 from repro.core.plane_schedule import PlaneSchedule
 from repro.models import unet
 from repro.obs.events import NULL_SINK, Event
@@ -76,6 +77,7 @@ class SegResult:
     ops: int
     n_tiles: int
     class_counts: dict[int, int]  # budget class -> tile count
+    pj: int = 0  # metered active energy: tile cycles at their plane rates
 
     @property
     def time_ms(self) -> float:
@@ -93,6 +95,14 @@ class SegResult:
     def energy_mj(self) -> float:
         return _IMPLIED_POWER_W * self.time_ms
 
+    @property
+    def metered_mj(self) -> float:
+        return em.pj_to_mj(self.pj)
+
+    @property
+    def metered_gops_per_w(self) -> float | None:
+        return em.metered_gops_per_w(self.ops, self.pj)
+
 
 @dataclass(frozen=True)
 class TileEvent:
@@ -104,7 +114,9 @@ class TileEvent:
     interesting content first; ``request.partial()`` is the stitch so far.
     ``cycles`` is the tile's relation-(2) price at its class schedule — the
     currency the serving gateway charges micro-batches against its round
-    budget in.
+    budget in.  ``pj`` is the same work priced in integer picojoules: each
+    layer's cycles at that layer's plane-proportional rate, so narrower
+    budget classes are cheaper per cycle, not just shorter.
     """
 
     rid: int
@@ -114,6 +126,7 @@ class TileEvent:
     core: tuple[int, int, int, int]  # (y0, x0, y1, x1) canvas coords
     done: bool  # this emission completed the request
     request: "SegRequest"
+    pj: int = 0
 
 
 @dataclass
@@ -131,6 +144,7 @@ class SegRequest:
     canvas_out: np.ndarray | None = None
     remaining: int = 0
     cycles: int = 0
+    pj: int = 0
     ops: int = 0
     class_counts: dict[int, int] = field(default_factory=dict)
     emitted: list[int] = field(default_factory=list)  # tile emission order
@@ -255,6 +269,7 @@ class SegEngine:
         self._tasks: dict[tuple[int, int, int, int], list] = {}
         self._fwd = _shared_forward(plan is not None and quantized)
         self._cfg_for_class: dict[int, unet.UNetConfig] = {}
+        self._pj_cache: dict[tuple[int, int, int], int] = {}
         self._next_rid = 0
         # telemetry (repro.obs.events): engine-local micro-batch records,
         # sequence-stamped — the gateway owns the cycle-exact account
@@ -287,6 +302,22 @@ class SegEngine:
             (in_h, in_w), self.cfg.in_ch, self.cfg.base, self.cfg.depth,
             self.cfg.convs_per_stage, self._class_planes(k),
         )
+
+    def _tile_pj(self, in_h: int, in_w: int, k: int) -> int:
+        """Metered active energy of one (in_h, in_w) tile at class ``k``:
+        the same relation-(2) layer cycles as :meth:`_tile_cycles`, each
+        priced at its layer's plane rate (integer pJ).  Memoized like the
+        cycle price — thousands of tiles share a handful of signatures."""
+        key = (in_h, in_w, k)
+        pj = self._pj_cache.get(key)
+        if pj is None:
+            layers = cm.unet_conv_layers(
+                (in_h, in_w), self.cfg.in_ch, self.cfg.base, self.cfg.depth,
+                self.cfg.convs_per_stage,
+            )
+            pj = em.schedule_pj(layers, self._class_planes(k))
+            self._pj_cache[key] = pj
+        return pj
 
     # ------------------------------------------------------------ admission
 
@@ -425,6 +456,7 @@ class SegEngine:
         out = np.asarray(self._fwd(self.params, jnp.asarray(x), self.class_cfg(k)))
         events: list[TileEvent] = []
         cyc = self._tile_cycles(in_h, in_w, k)  # one price, both accounts
+        pj = self._tile_pj(in_h, in_w, k)
         for b, (req, ti) in enumerate(taken):
             spec = req.plan.tiles[ti]
             cy, cx = spec.crop
@@ -432,6 +464,7 @@ class SegEngine:
                 spec.core_y0 : spec.core_y1, spec.core_x0 : spec.core_x1
             ] = out[b][cy, cx]
             req.cycles += cyc
+            req.pj += pj
             req.remaining -= 1
             req.emitted.append(ti)
             if req.remaining == 0:
@@ -442,13 +475,14 @@ class SegEngine:
                     core=(
                         spec.core_y0, spec.core_x0, spec.core_y1, spec.core_x1
                     ),
-                    done=req.done, request=req,
+                    done=req.done, request=req, pj=pj,
                 )
             )
         if self.obs.enabled:
             self._obs_seq += 1
             self.obs.emit(Event(self._obs_seq, "seg-batch", dict(
                 klass=int(k), tiles=len(taken), cycles=int(cyc * len(taken)),
+                pj=int(pj * len(taken)),
             )))
         return events
 
@@ -459,6 +493,7 @@ class SegEngine:
             ops=req.ops,
             n_tiles=req.plan.n_tiles,
             class_counts=dict(sorted(req.class_counts.items())),
+            pj=req.pj,
         )
         self.slots.release(req.slot)
         req.canvas_in = None

@@ -443,4 +443,18 @@ class Fabric:
         mon, _ = find_monitor(self._obs)
         if mon is not None:
             out["slo"] = mon.summary(scope=FLEET)
+        # an armed EnergyMeter surfaces the fleet joule ledger; metered
+        # GOPS/W divides fleet ops by fleet metered energy — the
+        # per-shard scopes stay queryable via meter.summary(shard)
+        from repro.core import energy_model as em
+        from repro.obs.energy import find_meter
+
+        meter, _ = find_meter(self._obs)
+        if meter is not None:
+            eb = meter.summary(scope=FLEET)
+            eb["metered_gops_w"] = em.metered_gops_per_w(
+                total_ops, eb["total_pj"]
+            )
+            eb["analytic_gops_w"] = out["gops_w"]
+            out["energy"] = eb
         return out

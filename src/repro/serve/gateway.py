@@ -1520,4 +1520,18 @@ class Gateway:
         mon, shard = find_monitor(self._obs)
         if mon is not None:
             out["slo"] = mon.summary(scope=shard)
+        # an armed EnergyMeter surfaces the joule ledger for the same
+        # scope; metered GOPS/W divides this gateway's ops by *metered*
+        # energy (active + idle), refining the analytic constant above
+        from repro.core import energy_model as em
+        from repro.obs.energy import find_meter
+
+        meter, eshard = find_meter(self._obs)
+        if meter is not None:
+            eb = meter.summary(scope=eshard)
+            eb["metered_gops_w"] = em.metered_gops_per_w(
+                total_ops, eb["total_pj"]
+            )
+            eb["analytic_gops_w"] = out["gops_w"]
+            out["energy"] = eb
         return out

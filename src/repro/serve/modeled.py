@@ -157,10 +157,22 @@ class ModeledLMAdapter(_ModeledBase):
 
     def work(self, budget: int, qos=None, force: bool = False,
              soft_limit: int | None = None):
-        consumed = 0
         completed: list[tuple] = []
+        consumed, force = self._work_prefill(
+            0, budget, qos, force, soft_limit
+        )
+        consumed = self._work_decode(
+            budget, consumed, qos, force, soft_limit, completed
+        )
+        done = {id(g) for g, _ in completed}
+        if done:
+            self._order = [g for g in self._order if id(g) not in done]
+        return consumed, completed, []
+
+    def _work_prefill(self, consumed, budget, qos, force, soft_limit):
+        """Chunked prefill in admission order; returns the consumed
+        cycles and whether the forced-progress escape is still live."""
         sc = self._step_cycles
-        # 1. chunked prefill, admission order
         for greq in self._order:
             if not self._matches(greq, qos):
                 continue
@@ -183,14 +195,22 @@ class ModeledLMAdapter(_ModeledBase):
                 self.exec_log.append((greq.rid, greq.qos, n * sc, consumed))
             if job.prefill_remaining:
                 break  # budget exhausted mid-prompt
-        # 2. batched decode: every ready matching job advances together
+        return consumed, force
+
+    def _ready(self, qos) -> list:
+        return [
+            g for g in self._order
+            if self._matches(g, qos)
+            and g.handle.prefill_remaining == 0
+            and g.handle.decode_remaining > 0
+        ]
+
+    def _work_decode(self, budget, consumed, qos, force, soft_limit,
+                     completed):
+        """Batched decode: every ready matching job advances together."""
+        sc = self._step_cycles
         while True:
-            ready = [
-                g for g in self._order
-                if self._matches(g, qos)
-                and g.handle.prefill_remaining == 0
-                and g.handle.decode_remaining > 0
-            ]
+            ready = self._ready(qos)
             if not ready:
                 break
             cost = sc * len(ready)
@@ -207,10 +227,136 @@ class ModeledLMAdapter(_ModeledBase):
                     self.exec_log.append((g.rid, g.qos, sc, consumed))
                 if g.handle.done:
                     completed.append((g, consumed))
-        done = {id(g) for g, _ in completed}
-        if done:
-            self._order = [g for g in self._order if id(g) not in done]
-        return consumed, completed, []
+        return consumed
+
+
+class ModeledSpecLMAdapter(ModeledLMAdapter):
+    """Precision-speculative decode, priced but not executed.
+
+    Mirrors :class:`~repro.serve.specdecode.SpecLMAdapter`'s chunked
+    speculative rounds and its full event protocol — per-slot ``exec``
+    attribution at the deterministic round price
+    (:func:`cm.lm_spec_step_cycles` itemization: k sequential draft
+    steps + one layer-pipelined verify pass), plus ``draft`` /
+    ``verify`` / ``accept`` / ``rollback`` lifecycle annotations with
+    the per-slot op-class cycle split the energy meter closes on —
+    without touching weights.  Acceptance is a seed-free deterministic
+    pattern (a pure function of the global round counter), so runs are
+    byte-identical like every other modeled adapter.
+    """
+
+    def __init__(self, *, batch: int, step_cycles: int, step_ops: int,
+                 draft_step_cycles: int, interval_cycles: int, k: int,
+                 accept_pattern=(4, 4, 3, 4, 2, 4, 4, 3)):
+        super().__init__(batch=batch, step_cycles=step_cycles,
+                         step_ops=step_ops)
+        if k < 1:
+            raise ValueError(f"spec depth k {k} < 1")
+        self._draft_step_cycles = int(draft_step_cycles)
+        self._interval_cycles = int(interval_cycles)
+        self._k = int(k)
+        self._pattern = tuple(
+            min(max(int(a), 0), self._k) for a in accept_pattern
+        )
+        if not self._pattern:
+            raise ValueError("accept_pattern must be non-empty")
+        self._spec_rounds = 0
+        self.obs_log: list[tuple] = []
+
+    @classmethod
+    def from_config(cls, cfg, *, batch: int, max_seq: int,
+                    draft_schedule=(2,), k: int = 4,
+                    accept_pattern=(4, 4, 3, 4, 2, 4, 4, 3)):
+        """Price drafts and verifies from a model config exactly as
+        SpecLMAdapter does: draft steps under ``draft_schedule``, the
+        verify pass layer-pipelined at the serve schedule's slowest
+        layer interval."""
+        price_kw = dict(
+            n_heads=cfg.n_heads, head_dim=cfg.hd,
+            n_kv_heads=cfg.n_kv_heads, context=max_seq,
+            n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+        )
+        return cls(
+            batch=batch,
+            step_cycles=cm.lm_step_cycles(
+                cfg.d_model, cfg.d_ff, cfg.n_layers,
+                cfg.quant.plane_schedule, **price_kw,
+            ),
+            step_ops=cm.lm_step_ops(
+                cfg.d_model, cfg.d_ff, cfg.n_layers, **price_kw
+            ),
+            draft_step_cycles=cm.lm_step_cycles(
+                cfg.d_model, cfg.d_ff, cfg.n_layers,
+                tuple(int(p) for p in draft_schedule), **price_kw,
+            ),
+            interval_cycles=max(cm.lm_layer_cycles(
+                cfg.d_model, cfg.d_ff, cfg.n_layers,
+                cfg.quant.plane_schedule, **price_kw,
+            )),
+            k=k,
+            accept_pattern=accept_pattern,
+        )
+
+    def _slot_cycles(self) -> int:
+        """Deterministic per-slot round price, fixed before acceptance
+        — the never-overdraft invariant SpecLMAdapter keeps."""
+        return (self._k * self._draft_step_cycles + self._step_cycles
+                + self._k * self._interval_cycles)
+
+    def _work_decode(self, budget, consumed, qos, force, soft_limit,
+                     completed):
+        k = self._k
+        ds, iv, sc = (self._draft_step_cycles, self._interval_cycles,
+                      self._step_cycles)
+        per_slot = self._slot_cycles()
+        while True:
+            ready = self._ready(qos)
+            if not ready:
+                break
+            n = len(ready)
+            cost = per_slot * n
+            over_hard = consumed + cost > budget
+            at_soft = soft_limit is not None and consumed >= soft_limit
+            if (over_hard or at_soft) and not (force and consumed == 0):
+                break
+            force = False
+            start = consumed
+            consumed += cost
+            accepted = self._pattern[
+                self._spec_rounds % len(self._pattern)
+            ]
+            self._spec_rounds += 1
+            if self.obs_enabled:
+                draft_c = k * ds * n
+                self.obs_log.append(("draft", dict(
+                    k=k, slots=n, cycles=draft_c,
+                ), start + draft_c))
+                self.obs_log.append(("verify", dict(
+                    tokens=k + 1, slots=n, cycles=cost - draft_c,
+                ), consumed))
+            for g in ready:
+                # accepted drafts + the verify pass's one correction
+                emit = min(accepted + 1, g.handle.decode_remaining)
+                g.handle.decode_remaining -= emit
+                self.total_ops += self._step_ops * emit
+                if self.obs_enabled:
+                    self.exec_log.append((g.rid, g.qos, per_slot,
+                                          consumed))
+                    self.obs_log.append(("accept", dict(
+                        rid=g.rid, qos=g.qos, k=k, accepted=accepted,
+                        emitted=emit,
+                        draft_cycles=k * ds,
+                        verify_cycles=sc + k * iv,
+                        wasted_draft_cycles=(k - accepted) * ds,
+                        wasted_verify_cycles=(k - accepted) * iv,
+                    ), consumed))
+                    if accepted < k:
+                        self.obs_log.append(("rollback", dict(
+                            rid=g.rid, qos=g.qos, rejected=k - accepted,
+                        ), consumed))
+                if g.handle.done:
+                    completed.append((g, consumed))
+        return consumed
 
 
 class ModeledSegAdapter(_ModeledBase):

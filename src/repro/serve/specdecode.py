@@ -362,9 +362,24 @@ class SpecLMAdapter(LMAdapter):
                         g2 = self._inflight.get(id(slot_req[s["slot"]]))
                         if g2 is None:
                             continue
+                        # per-slot cycle split by op class: the energy
+                        # meter re-derives the round-level draft/verify
+                        # totals from these (two independent event
+                        # paths, gated equal) and prices the wasted
+                        # share — (k-a) draft steps at the draft-plane
+                        # rate, (k-a) pipeline intervals at full digits
+                        rej = rec["k"] - s["accepted"]
                         self.obs_log.append(("accept", dict(
                             rid=g2.rid, qos=g2.qos, k=rec["k"],
                             accepted=s["accepted"], emitted=s["emitted"],
+                            draft_cycles=rec["k"]
+                            * self._draft_step_cycles,
+                            verify_cycles=self._step_cycles
+                            + rec["k"] * self._interval_cycles,
+                            wasted_draft_cycles=rej
+                            * self._draft_step_cycles,
+                            wasted_verify_cycles=rej
+                            * self._interval_cycles,
                         ), consumed))
                         if s["accepted"] < rec["k"]:
                             self.obs_log.append(("rollback", dict(

@@ -232,6 +232,8 @@ def _summary(gateway, row_prefix: str) -> dict:
     )
     if "slo" in st:
         out["slo"] = st["slo"]
+    if "energy" in st:
+        out["energy"] = st["energy"]
     return out
 
 

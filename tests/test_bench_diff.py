@@ -379,6 +379,26 @@ def test_specdecode_ledger_trend_checks_speedup(tmp_path, monkeypatch):
     worse["gate"]["speedup"] = 1.4  # -18% on the same operating point
     p.write_text(json.dumps(worse))
     entries = bd.update_ledger(ledger, [str(p)], gops_w_tol=0.05)
+    # accept_rate is now a tracked headline column too (unchanged -> ok)
     assert [(e["metric"], e["status"]) for e in entries] == [
-        ("ledger:speedup", "regression")
+        ("ledger:speedup", "regression"), ("ledger:accept_rate", "ok")
+    ]
+
+
+def test_ledger_accept_rate_drop_is_a_regression(tmp_path, monkeypatch):
+    """The satellite: accept rate is a tracked BENCH_LEDGER headline
+    column — a drop beyond tolerance fails the trend even when the
+    speedup headline holds (wasted verify work is an energy regression
+    the throughput figure can mask)."""
+    ledger = str(tmp_path / "LEDGER.jsonl")
+    p = tmp_path / "BENCH_specdecode.json"
+    p.write_text(json.dumps(SPECDECODE))
+    bd.update_ledger(ledger, [str(p)], gops_w_tol=0.05)
+    monkeypatch.setattr(bd, "_git", lambda *a: "deadbeef\n")
+    worse = copy.deepcopy(SPECDECODE)
+    worse["gate"]["accept_rate"] = 0.70  # -19% at the same speedup
+    p.write_text(json.dumps(worse))
+    entries = bd.update_ledger(ledger, [str(p)], gops_w_tol=0.05)
+    assert [(e["metric"], e["status"]) for e in entries] == [
+        ("ledger:speedup", "ok"), ("ledger:accept_rate", "regression")
     ]

@@ -31,6 +31,40 @@ def test_table1_proposed_row_as_printed():
     assert power * row["time_ms"] == pytest.approx(row["e_mj"], rel=2e-3)
 
 
+def test_platform_rows_cross_validate_table1_as_printed():
+    """Every Table 1 platform, rebuilt as a PlatformRow from its printed
+    (time, power, ops) and cross-validated against the printed derived
+    columns.  All printed rows imply one shared workload of ~2.82 GOP
+    (ops = gops x time), and every row's energy column is consistent
+    with its own power — except the msdf row, whose printed 1644.77 mJ
+    contradicts the power implied by its own gops/gops_w columns
+    (6.99 W x 133.94 ms = 936.7 mJ, a 1.76x discrepancy *in the paper
+    as printed*).  That inconsistency is pinned here deliberately: a
+    future 'fix' of either number must be a conscious decision."""
+    paper_ops = 2_820_000_000
+    for name, t in cm.PAPER_TABLE1.items():
+        implied_ops = t["gops"] * t["time_ms"] * 1e6
+        assert implied_ops == pytest.approx(paper_ops, rel=1.5e-3), name
+        power = t["gops"] / t["gops_w"]
+        row = cm.PlatformRow(name, t["time_ms"], power, paper_ops)
+        assert row.gops == pytest.approx(t["gops"], rel=1.5e-3), name
+        assert row.gops_per_w == pytest.approx(t["gops_w"], rel=2e-3), name
+        if name == "msdf":
+            assert row.energy_mj == pytest.approx(936.7, rel=2e-3)
+            assert t["e_mj"] / row.energy_mj == pytest.approx(1.756,
+                                                             rel=2e-3)
+        else:
+            assert row.energy_mj == pytest.approx(t["e_mj"], rel=5e-3), \
+                name
+    # the slice-efficiency column round-trips where printed
+    for name in ("proposed", "bit_parallel", "bit_serial", "msdf"):
+        t = cm.PAPER_TABLE1[name]
+        slices = int(t["gops"] / (t["aeff"] * 1e-4))
+        row = cm.PlatformRow(name, t["time_ms"], t["gops"] / t["gops_w"],
+                             paper_ops, slices=slices)
+        assert row.gops_per_slice_e4 == pytest.approx(t["aeff"], rel=2e-3)
+
+
 def test_calibrated_unet_golden(layers):
     """The calibrated config's relation-(2) outputs, locked exactly."""
     assert cm.CALIBRATED_UNET == dict(

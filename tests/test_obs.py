@@ -88,6 +88,25 @@ def test_exact_percentile_basics():
     assert exact_percentile([5, 5, 5], 1) == 5
 
 
+def test_exact_percentile_edges():
+    """Edge cases: empty and single samples at the extreme percentiles,
+    pct=0 (the k=0 index clamps to the minimum, never an index error),
+    pct=100 (the maximum), and input order independence."""
+    assert exact_percentile([], 0) is None
+    assert exact_percentile([], 100) is None
+    assert exact_percentile([42], 0) == 42
+    assert exact_percentile([42], 50) == 42
+    assert exact_percentile([42], 100) == 42
+    assert exact_percentile([9, 3, 7], 0) == 3
+    assert exact_percentile([9, 3, 7], 100) == 9
+    vals = [5, 1, 4, 1, 5, 9, 2, 6]
+    for pct in (0, 10, 50, 90, 100):
+        assert exact_percentile(vals, pct) == \
+            exact_percentile(sorted(vals), pct)
+        assert exact_percentile(vals, pct) == \
+            exact_percentile(list(reversed(vals)), pct)
+
+
 @given(st.lists(st.integers(0, 10_000), min_size=1, max_size=60),
        st.integers(1, 100))
 @settings(max_examples=60, deadline=None)

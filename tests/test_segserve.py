@@ -431,3 +431,45 @@ def test_segserve_bench_smoke(tmp_path):
     assert by_name["adaptive"]["rel_err"] <= data["target_rel_err"]
     assert by_name["adaptive"]["cert"] == gate["cert"]
     assert data["plan"]["workload"] == "unet"
+
+
+def test_engine_metered_energy_account():
+    """The engine's integer-pJ account: per-tile emissions sum exactly to
+    the request's metered energy, full-8 prices every cycle at the full
+    plane rate, and adaptive truncation saves superlinearly (cheaper rate
+    on top of fewer cycles)."""
+    from repro.core import energy_model as em
+
+    _, params = _net(2)
+    image = _flat_background_image(np.random.default_rng(3))
+    kw = dict(tile=16, batch=4)
+    fcfg = dataclasses.replace(
+        _net(2)[0], quant_mode="mma_int8", impl="xla", planes=8
+    )
+    eng = SegEngine(fcfg, params, adaptive=False, **kw)
+    tile_pj = 0
+    for ev in eng.serve_stream([image]):
+        assert isinstance(ev.pj, int) and ev.pj > 0
+        tile_pj += ev.pj
+        res = ev.request.result
+    # emissions close against the request account, integer-exactly
+    assert res.pj == tile_pj
+    # uniform full-8: metered == cycles x full rate, and the metered
+    # figures agree with the analytic flat-power ones by construction
+    assert res.pj == res.cycles * em.active_rate_pj(8)
+    assert res.metered_mj == pytest.approx(
+        em.pj_to_mj(res.cycles * em.PJ_FULL_CYCLE)
+    )
+    assert res.metered_gops_per_w == pytest.approx(
+        1000.0 * res.ops / res.pj
+    )
+    # adaptive truncation: fewer cycles AND a cheaper per-cycle rate
+    qcfg = dataclasses.replace(fcfg, planes=None,
+                               plane_schedule=(6, 6, 6, 5, 5))
+    res_a = SegEngine(qcfg, params, adaptive=True, **kw).run([image])[0]
+    res_u = SegEngine(qcfg, params, adaptive=False, **kw).run([image])[0]
+    assert res_a.pj < res_u.pj < res.pj
+    assert res_a.metered_gops_per_w > res_u.metered_gops_per_w
+    # superlinear: the pJ ratio beats the cycle ratio (rate savings ride
+    # on top of the cycle shrink)
+    assert res_a.pj * res_u.cycles < res_u.pj * res_a.cycles
